@@ -1,0 +1,52 @@
+"""Paper Fig. 6 — FA3 kernel latency: cycle simulation vs analytical model.
+
+The paper validates Sim-FA against H800 wall-clock over Llama-3 {8B, 70B,
+405B} x seqlen {512, 1024, 2048, 4096, 6144} and reports 5.7% MAPE. With no
+H800 in this container, the reproduced artifact is *internal consistency*:
+the cycle-level pipeline simulation must land near the corrected analytical
+model (SimFA-python) across the same 15 cells, and both must sit above the
+naive roofline lower bound. Large cells exercise the hierarchical fidelity
+fallback exactly as the paper falls back to the analytical model.
+"""
+from __future__ import annotations
+
+from repro.configs.llama3 import workload
+from repro.core import analytical
+from repro.core.genz_baseline import genz_latency
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+
+from benchmarks.common import Sink, mape, max_ape
+
+MODELS = ("8B", "70B", "405B")
+SEQLENS = (512, 1024, 2048, 4096, 6144)
+
+
+def run(sink: Sink):
+    cfg = H800
+    pairs = []
+    for m in MODELS:
+        for s in SEQLENS:
+            w = workload(m, s, batch=1)
+            sim = simulate_fa3(w, cfg, fidelity="auto")
+            rep = analytical.analyze(w, cfg)
+            genz_us = genz_latency(w, cfg) * 1e6
+            ana_us = rep.latency * 1e6
+            pairs.append((sim.latency_us, ana_us))
+            sink.row(model=m, seqlen=s, sim_us=round(sim.latency_us, 1),
+                     analytical_us=round(ana_us, 1),
+                     genz_roofline_us=round(genz_us, 1),
+                     fidelity=sim.fidelity,
+                     tc_util=round(sim.tc_util, 3),
+                     bottleneck=rep.bottleneck,
+                     ape=round(abs(sim.latency_us - ana_us) / ana_us, 4))
+            assert not sim.deadlocked, f"deadlock at {m}/{s}"
+
+    sink.derive(
+        mape_sim_vs_analytical=round(mape(pairs), 4),
+        max_ape=round(max_ape(pairs), 4),
+        paper_mape=0.057,
+        paper_max_ape=0.127,
+        note=("no H800 available: reference is the corrected analytical "
+              "model, not hardware (DESIGN.md §8)"),
+    )

@@ -1,0 +1,64 @@
+"""Kernel microbench: Pallas flash attention / flash decode (interpret mode)
+vs the pure-jnp oracles — correctness deltas + CPU wall time per call.
+
+Wall time in interpret mode is NOT a TPU performance proxy; the performance
+artifact for kernels is the roofline/§Perf analysis. This bench pins down
+numerical parity and gives a regression-visible latency fingerprint.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+
+from benchmarks.common import Sink
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *a, n=3, **kw):
+    fn(*a, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*a, **kw)
+    out.block_until_ready()
+    return out, (time.perf_counter() - t0) / n * 1e6
+
+
+def run(sink: Sink):
+    cases = [
+        ("fwd_256x64", dict(B=1, H=4, Hkv=2, L=256, S=256, D=64, causal=True)),
+        ("fwd_128x128", dict(B=2, H=4, Hkv=4, L=128, S=128, D=128, causal=False)),
+    ]
+    for name, c in cases:
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (c["B"], c["H"], c["L"], c["D"]))
+        k = jax.random.normal(ks[1], (c["B"], c["Hkv"], c["S"], c["D"]))
+        v = jax.random.normal(ks[2], (c["B"], c["Hkv"], c["S"], c["D"]))
+        o, t_k = _time(flash_attention, q, k, v, causal=c["causal"],
+                       block_q=64, block_k=64, interpret=True)
+        o_ref, t_r = _time(ref.flash_attention_ref, q, k, v, causal=c["causal"])
+        err = float(jnp.max(jnp.abs(o - o_ref)))
+        sink.row(case=name, us_per_call=round(t_k, 1),
+                 ref_us=round(t_r, 1), max_abs_err=err)
+        assert err < 2e-5, f"{name}: kernel diverges from oracle"
+
+    # decode
+    B, H, Hkv, S, D = 2, 8, 2, 512, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, Hkv, S, D))
+    vc = jax.random.normal(ks[2], (B, Hkv, S, D))
+    o, t_k = _time(flash_decode, q, kc, vc, 300, block_k=128, interpret=True)
+    o_ref, t_r = _time(ref.flash_decode_ref, q, kc, vc, jnp.full((B,), 300))
+    err = float(jnp.max(jnp.abs(o - o_ref)))
+    sink.row(case="decode_512", us_per_call=round(t_k, 1), ref_us=round(t_r, 1),
+             max_abs_err=err)
+    assert err < 2e-5
+    sink.derive(all_match_oracle=True)

@@ -1,0 +1,37 @@
+"""Paper Fig. 4 — MSHR sensitivity of TMA bandwidth.
+
+Sweeps the per-slice LLC MSHR count on the miss-dominated 2D 64x64 copy
+(the paper's most MSHR-visible case). Small pools throttle memory-level
+parallelism below the bandwidth-delay product; beyond the knee the curve
+flattens — the paper finds the measured H800 sits at the 256 inflection
+point. With no hardware, the reproduced artifact is the knee itself: the
+calibrated value (256) must lie in the saturated region while 96-or-less
+clearly throttles.
+"""
+from __future__ import annotations
+
+from repro.core.machine import h800_variant
+
+from benchmarks.common import Sink
+from benchmarks.bench_mshr_harness import measure_bw_2d
+
+MSHR_SWEEP = [48, 96, 128, 192, 256, 384]
+
+
+def run(sink: Sink):
+    bw = {}
+    for mshr in MSHR_SWEEP:
+        cfg = h800_variant(l2_mshr_per_slice=mshr)
+        r = measure_bw_2d(cfg)
+        bw[mshr] = r["payload_gbs"]
+        sink.row(mshr_per_slice=mshr, payload_gbs=round(r["payload_gbs"], 1),
+                 cycles=r["cycles"])
+    peak = max(bw.values())
+    knee = min(m for m in MSHR_SWEEP if bw[m] >= 0.97 * peak)
+    sink.derive(
+        knee_mshr=knee,
+        bw_at_knee_gbs=round(bw[knee], 1),
+        bw_48_frac=round(bw[48] / peak, 3),
+        calibrated_256_saturated=bw[256] >= 0.97 * peak,
+        throttled_below_knee=bw[48] < 0.8 * peak,
+    )

@@ -1,0 +1,13 @@
+"""Shared harness for the MSHR sweep (kept separate so bench_mshr and tests
+import it without circularity)."""
+from __future__ import annotations
+
+from benchmarks.bench_tma_bandwidth import bandwidth_case
+
+
+def measure_bw_2d(cfg, n_sms: int = 132, tiles_per_sm: int = 24):
+    e = 2
+    return bandwidth_case(
+        cfg, name="2d_64x64", box=(1, 64, 64), dims=(1, 1 << 20, 64),
+        strides=(1 << 40, 64 * e, e), bulk=False, n_sms=n_sms,
+        tiles_per_sm=tiles_per_sm)

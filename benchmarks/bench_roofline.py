@@ -1,0 +1,41 @@
+"""Roofline terms per (arch x shape) from the multi-pod dry-run artifacts.
+
+Reads ``results/dryrun.json`` (produced by ``repro.launch.dryrun``) and
+reports the three-term roofline per cell — the §Roofline deliverable in
+benchmark form. Skips gracefully if the dry-run has not been executed.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch import roofline
+
+from benchmarks.common import Sink
+
+DRYRUN = Path("results/dryrun.json")
+
+
+def run(sink: Sink):
+    if not DRYRUN.exists():
+        sink.derive(skipped="results/dryrun.json missing — run "
+                            "`python -m repro.launch.dryrun` first")
+        return
+    rows = roofline.analyze_all(DRYRUN)
+    bounds = {"compute": 0, "memory": 0, "collective": 0}
+    for r in rows.values():
+        if r["mesh"] != "single_pod_16x16":
+            continue
+        bounds[r["bottleneck"]] += 1
+        sink.row(arch=r["arch"], shape=r["shape"],
+                 compute_s=round(r["t_compute_s"], 4),
+                 memory_s=round(r["t_memory_s"], 4),
+                 collective_s=round(r["t_collective_s"], 4),
+                 bound=r["bottleneck"],
+                 useful_ratio=round(r["useful_flops_ratio"], 3),
+                 roofline_frac=round(r["roofline_fraction"], 3))
+    singles = [r for r in rows.values() if r["mesh"] == "single_pod_16x16"]
+    sink.derive(cells=len(singles),
+                bound_histogram=bounds,
+                mean_roofline_frac=round(
+                    sum(r["roofline_fraction"] for r in singles)
+                    / max(len(singles), 1), 3))

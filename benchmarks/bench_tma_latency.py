@@ -1,0 +1,103 @@
+"""Paper Fig. 3 — TMA latency across working-set sizes.
+
+Reproduces the random-pointer-chase methodology: serialized single-line TMA
+loads over working sets spanning the L2-hit floor (<25 MB), the partitioned
+25-50 MB transition window (RemoteCopy proxy active), and the DRAM-bound
+plateau (>50 MB). Having no H800, the reference is the paper's *regime
+structure*: three latency levels, monotone non-decreasing, with the floor at
+near-L2 latency + TMA setup and the plateau adding the DRAM round trip.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.core.machine import H800, h800_variant
+from repro.core.memory import EventQueue, build_memory
+
+from benchmarks.common import Sink
+
+WS_MB = [4, 8, 16, 25, 28, 32, 40, 50, 64, 96, 128]
+N_PROBES = 400
+SEED = 7
+
+
+def chase_latency(cfg, ws_bytes: int, seed: int = SEED) -> float:
+    """Average latency (cycles) of a serialized random-permutation pointer
+    chase over ``ws_bytes``: warm laps bring the system to steady state
+    (mirrors populated, LRU settled), then one measured lap."""
+    evq = EventQueue()
+    lrc, l2, dram = build_memory(cfg, evq)
+    rng = random.Random(seed)
+    n_lines = ws_bytes // cfg.line_bytes
+    setup = cfg.tma_launch_latency + cfg.tma_tmap_setup_latency
+    order = list(range(n_lines))
+    rng.shuffle(order)
+
+    # warm lap 0: untimed tag inserts (one pass of the chase, no timing)
+    for i in order:
+        addr = i * cfg.line_bytes
+        l2.slices[l2.slice_of(addr)]._insert(addr)
+
+    warm_laps = 2 if ws_bytes <= 50 * 1024 * 1024 else 1
+    # cap the measured lap so huge working sets stay tractable
+    measure = min(n_lines, 40_000)
+    total = warm_laps * n_lines + measure
+    state = {"cycle": 0, "done": 0, "lat_sum": 0, "measured": 0}
+    current = [0]
+
+    def probe():
+        if state["done"] >= total:
+            return
+        i = state["done"]
+        lap_pos = i % n_lines
+        addr = order[lap_pos] * cfg.line_bytes
+        t_issue = state["cycle"]
+        timed = i >= warm_laps * n_lines
+
+        def l2_cb():
+            # fires inside pop_ready(nxt): current[0] is the absorb cycle
+            if timed:
+                state["lat_sum"] += current[0] - t_issue + setup
+                state["measured"] += 1
+            state["done"] += 1
+            state["cycle"] = current[0]
+            probe()
+
+        lrc.request(t_issue, addr, 0, l2_cb)
+
+    probe()
+    while evq._h and state["done"] < total:  # noqa: SLF001
+        nxt = evq.next_cycle()
+        current[0] = nxt
+        evq.pop_ready(nxt)
+    return state["lat_sum"] / max(state["measured"], 1)
+
+
+def run(sink: Sink):
+    cfg = H800
+    lat = {}
+    for ws in WS_MB:
+        cycles = chase_latency(cfg, ws * 1024 * 1024)
+        lat[ws] = cycles
+        regime = ("l2_floor" if ws < 25 else
+                  "transition" if ws <= 50 else "dram_plateau")
+        sink.row(ws_mb=ws, avg_cycles=round(cycles, 1), regime=regime)
+
+    # no-RemoteCopy ablation over the transition window (Fig. 3 inset)
+    cfg_norc = h800_variant(remote_copy=False)
+    for ws in (28, 40):
+        cycles = chase_latency(cfg_norc, ws * 1024 * 1024)
+        sink.row(ws_mb=ws, avg_cycles=round(cycles, 1), regime="transition_noRC")
+
+    floor = min(lat[w] for w in WS_MB if w < 25)
+    plateau = lat[128]
+    mid = lat[32]
+    setup = cfg.tma_launch_latency + cfg.tma_tmap_setup_latency
+    sink.derive(
+        floor_cycles=round(floor, 1),
+        plateau_cycles=round(plateau, 1),
+        setup_cycles=setup,
+        floor_expected=setup + cfg.l2_near_latency,
+        plateau_gt_mid_gt_floor=bool(plateau > mid > floor),
+        monotone=all(lat[a] <= lat[b] * 1.02 for a, b in zip(WS_MB, WS_MB[1:])),
+    )

@@ -1,0 +1,78 @@
+"""Paper Fig. 9 — DRAM traffic regimes: SimFA-python vs GenZ vs simulation.
+
+Llama-3 405B, B=1, growing sequence length. Three curves:
+  * GenZ-style ideal-cache baseline (Q/K/V/O moved once) — the paper shows
+    it *under*-estimates long sequences;
+  * SimFA-python with the Eq.-4 regime split and Eq.-5/6 wave model;
+  * the cycle simulator's measured DRAM bytes (hierarchical fidelity, memory
+    system scaled with the simulated SM subset).
+
+The reproduced claim: measured traffic leaves the ideal regime once the K/V
+working set exceeds the effective LLC capacity, and the wave model tracks it
+while the ideal model diverges. The simulated machine's capacity boundary
+sits at S* where 2*P*S*D = effective L2 of the *scaled* memory system, so
+the crossover happens at proportionally shorter S than H800's 32-48K.
+"""
+from __future__ import annotations
+
+from repro.configs.llama3 import AttnWorkload, workload
+from repro.core import analytical
+from repro.core.genz_baseline import genz_dram_traffic
+from repro.core.machine import H800, GPUMachine, h800_variant
+from repro.core.simfa import simulate_fa3
+from repro.core.tracegen_fa3 import FA3Tiling
+
+from benchmarks.common import Sink
+
+# the simulated sub-machine's Eq.-4 boundary sits at S* = L2_eff/(2*P*D)
+# ~ 3K for the 8/132-scaled L2 — the regime transition is fully visible
+# inside this (cheap) range; the H800-scale 32-48K crossover is validated
+# analytically in tests/test_analytical.py
+SEQLENS = (1024, 2048, 4096, 8192, 12288)
+N_SUB = 8
+TILING = FA3Tiling()
+
+
+def run(sink: Sink):
+    cfg = H800
+    # scaled-memory analytical twin of the simulated sub-machine: N_SUB SMs
+    # with an L2/DRAM share of N_SUB/132 — the hierarchical-fidelity deal
+    scale = N_SUB / cfg.num_sms
+    sub = h800_variant(num_sms=N_SUB,
+                       l2_bytes=int(cfg.l2_bytes * scale),
+                       dram_bw_gbps=cfg.dram_bw_gbps * scale,
+                       dram_channels=max(1, int(cfg.dram_channels * scale)))
+
+    ideal_exits = None
+    for s in SEQLENS:
+        w = workload("405B", s, batch=1)
+        sim = simulate_fa3(w, cfg, fidelity="hierarchical", n_sub=N_SUB)
+        # per-CTA traffic from the sub-machine, extrapolated to the launch —
+        # compare against the sub-machine analytical model scaled the same way
+        rep = analytical.analyze(w, sub, t_m=TILING.t_m)
+        genz_b = genz_dram_traffic(w)
+        measured = sim.dram_bytes
+        if not rep.ideal_regime and ideal_exits is None:
+            ideal_exits = s
+        sink.row(seqlen=s,
+                 measured_gb=round(measured / 1e9, 3),
+                 simfa_gb=round(rep.dram_bytes / 1e9, 3),
+                 genz_ideal_gb=round(genz_b / 1e9, 3),
+                 regime="ideal" if rep.ideal_regime else "realistic",
+                 waves=rep.waves_per_group,
+                 ape_simfa=round(abs(rep.dram_bytes - measured)
+                                 / max(measured, 1), 3),
+                 ape_genz=round(abs(genz_b - measured) / max(measured, 1), 3))
+
+    rows = sink.rows
+    last = rows[-1]
+    first = rows[0]
+    sink.derive(
+        regime_transition_seqlen=ideal_exits,
+        genz_underestimates_long=last["genz_ideal_gb"] < 0.6 * last["measured_gb"],
+        simfa_tracks_long=last["ape_simfa"] < 0.5,
+        short_seq_near_ideal=first["ape_genz"] < 0.6,
+        note=("crossover scaled to the simulated sub-machine's L2 share; "
+              "H800-scale crossover at 32-48K reproduced analytically in "
+              "tests/test_analytical.py"),
+    )

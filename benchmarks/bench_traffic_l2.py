@@ -1,0 +1,55 @@
+"""Paper Fig. 8 — L2 (LLC) demand-traffic validation of SimFA-python.
+
+Eq. (2) predicts the traffic *requested from* L2 by the FA3 tiling schedule.
+The ground truth here is the cycle simulator's own request counter (the
+paper uses NCU on GB10); the bench verifies the closed form tracks the
+simulated demand across models x sequence lengths, including the
+O(L*S/T_M) long-sequence scaling.
+"""
+from __future__ import annotations
+
+from repro.configs.llama3 import workload
+from repro.core import analytical
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+from repro.core.tracegen_fa3 import FA3Tiling
+
+from benchmarks.common import Sink, mape, max_ape
+
+MODELS = ("8B", "70B", "405B")
+SEQLENS = (512, 1024, 2048)
+TILING = FA3Tiling()
+
+
+def run(sink: Sink):
+    cfg = H800
+    pairs = []
+    scaling = {}
+    for m in MODELS:
+        for s in SEQLENS:
+            w = workload(m, s, batch=1)
+            sim = simulate_fa3(w, cfg, fidelity="auto")
+            model_bytes = analytical.l2_traffic(w, TILING.t_m)
+            pairs.append((model_bytes, sim.l2_bytes))
+            scaling[(m, s)] = model_bytes
+            sink.row(model=m, seqlen=s,
+                     model_l2_gb=round(model_bytes / 1e9, 3),
+                     sim_l2_gb=round(sim.l2_bytes / 1e9, 3),
+                     lrc_filter=round(sim.l2_delivered_bytes
+                                      / max(sim.l2_bytes, 1), 3),
+                     ape=round(abs(model_bytes - sim.l2_bytes)
+                               / max(sim.l2_bytes, 1), 4),
+                     fidelity=sim.fidelity)
+
+    # long-sequence scaling exponent: L2 ~ O(L*S) at L=S -> slope ~2 in log
+    import math
+    xs = [math.log(s) for s in SEQLENS]
+    for m in MODELS:
+        ys = [math.log(scaling[(m, s)]) for s in SEQLENS]
+        n = len(xs)
+        slope = ((n * sum(x * y for x, y in zip(xs, ys)) - sum(xs) * sum(ys))
+                 / (n * sum(x * x for x in xs) - sum(xs) ** 2))
+        sink.derive(**{f"scaling_exponent_{m}": round(slope, 3)})
+
+    sink.derive(mape_model_vs_sim=round(mape(pairs), 4),
+                max_ape=round(max_ape(pairs), 4))

@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: result sink, CSV rows, MAPE helpers.
+
+Every ``bench_*`` module exposes ``run(sink) -> None`` and registers rows via
+``sink.row(...)``; ``benchmarks/run.py`` orchestrates and writes
+``results/bench/<name>.json`` plus a flat CSV stream on stdout.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+class Sink:
+    """Collects benchmark rows + derived summary metrics."""
+
+    def __init__(self, name: str, quiet: bool = False):
+        self.name = name
+        self.rows: List[Dict[str, Any]] = []
+        self.derived: Dict[str, Any] = {}
+        self.quiet = quiet
+        self.t0 = time.time()
+
+    def row(self, **kw):
+        self.rows.append(kw)
+        if not self.quiet:
+            print(f"  {self.name}," + ",".join(f"{k}={_fmt(v)}" for k, v in kw.items()),
+                  flush=True)
+
+    def derive(self, **kw):
+        self.derived.update(kw)
+
+    def finish(self) -> Dict[str, Any]:
+        out = {"bench": self.name, "rows": self.rows, "derived": self.derived,
+               "wall_s": round(time.time() - self.t0, 2)}
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / f"{self.name}.json").write_text(json.dumps(out, indent=1))
+        return out
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return v
+
+
+def mape(pairs) -> float:
+    """Mean absolute percentage error over (predicted, reference) pairs."""
+    errs = [abs(p - r) / abs(r) for p, r in pairs if r]
+    return sum(errs) / max(len(errs), 1)
+
+
+def max_ape(pairs) -> float:
+    errs = [abs(p - r) / abs(r) for p, r in pairs if r]
+    return max(errs) if errs else 0.0

@@ -1,0 +1,90 @@
+"""Benchmark suite runner — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME[,NAME..]] [--fast]
+
+Prints ``name,key=value,...`` CSV rows per benchmark plus a final summary;
+writes ``results/bench/<name>.json`` per bench.
+
+| paper artifact                     | bench            |
+|------------------------------------|------------------|
+| Fig. 3 TMA latency regimes         | tma_latency      |
+| Fig. 4 MSHR sensitivity            | mshr             |
+| Fig. 5 TMA bandwidth bulk/1D/2D/3D | tma_bandwidth    |
+| Fig. 6 FA3 latency sim-vs-model    | fa3_latency      |
+| Fig. 7 pipeline Gantt              | gantt            |
+| Fig. 8 L2 traffic validation       | traffic_l2       |
+| Fig. 9 DRAM regimes vs GenZ        | traffic_dram     |
+| Table 5 ablations                  | ablations        |
+| (ours) Pallas kernels vs oracle    | kernels          |
+| (ours) dry-run roofline terms      | roofline         |
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import traceback
+
+from benchmarks.common import Sink
+
+BENCHES = [
+    "kernels",
+    "roofline",
+    "gantt",
+    "ablations",
+    "fa3_latency",
+    "traffic_l2",
+    "traffic_dram",
+    "tma_latency",
+    "mshr",
+    "tma_bandwidth",
+]
+
+FAST_SKIP = {"tma_bandwidth", "mshr", "tma_latency"}   # slowest three
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slowest microbenches")
+    args = ap.parse_args(argv)
+
+    names = list(BENCHES)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",")]
+    elif args.fast:
+        names = [n for n in names if n not in FAST_SKIP]
+
+    failures = []
+    summaries = []
+    for name in names:
+        print(f"=== bench {name} ===", flush=True)
+        sink = Sink(name)
+        try:
+            mod = importlib.import_module(f"benchmarks.bench_{name}")
+            mod.run(sink)
+            out = sink.finish()
+            summaries.append((name, out["wall_s"], out["derived"]))
+            print(f"--- {name} ok ({out['wall_s']}s) "
+                  f"derived={out['derived']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"--- {name} FAILED: {e}", flush=True)
+
+    print("\n=== summary ===")
+    for name, wall, derived in summaries:
+        print(f"{name},wall_s={wall}," +
+              ",".join(f"{k}={v}" for k, v in derived.items()
+                       if not isinstance(v, (dict, list))))
+    if failures:
+        print(f"\n{len(failures)} bench(es) FAILED: "
+              f"{[n for n, _ in failures]}")
+        return 1
+    print(f"\nall {len(summaries)} benches passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,94 @@
+"""Design-space exploration with the paper's models — three studies:
+
+  A. Long-context DRAM-traffic regimes on H800 (paper §6.2 / Fig. 9):
+     where the ideal-cache assumption breaks, and how far GenZ-style
+     models underestimate.
+  B. Sim-guided Pallas flash-attention block-size selection on TPU v5e
+     (the paper's profiling-driven tile choice, §2.2, with SimFA-TPU as
+     the profiler) for assigned-architecture attention shapes.
+  C. Future-hardware what-if (§3.6): sweep effective L2 capacity and SM
+     count; watch the bottleneck migrate and the wave factor collapse.
+
+    PYTHONPATH=src python examples/simulate_dse.py
+"""
+from __future__ import annotations
+
+from repro.configs import registry
+from repro.configs.llama3 import AttnWorkload, workload
+from repro.core import analytical
+from repro.core.genz_baseline import genz_dram_traffic
+from repro.core.machine import H800, TPU_V5E, h800_variant
+from repro.core.tpu.autotune import autotune_flash
+
+
+def study_a():
+    print("=" * 72)
+    print("A. DRAM traffic regimes, Llama-3 405B on H800 (GB per kernel)")
+    print(f"{'seq':>8} {'regime':>10} {'waves':>6} {'SimFA':>9} "
+          f"{'GenZ':>9} {'GenZ err':>9}")
+    for s in (8192, 16384, 32768, 49152, 65536, 131072):
+        w = workload("405B", s, batch=1)
+        rep = analytical.analyze(w, H800)
+        genz = genz_dram_traffic(w)
+        err = (genz - rep.dram_bytes) / rep.dram_bytes
+        print(f"{s:>8} {('ideal' if rep.ideal_regime else 'real'):>10} "
+              f"{rep.waves_per_group:>6} {rep.dram_bytes/1e9:>9.2f} "
+              f"{genz/1e9:>9.2f} {err:>+9.1%}")
+    print("-> beyond the Eq.(4) boundary GenZ underestimates by the wave "
+          "factor;\n   long-context DSE on ideal-cache models picks the "
+          "wrong designs (paper §6.2.3)\n")
+
+
+def study_b():
+    print("=" * 72)
+    print("B. SimFA-TPU-guided flash block sizes (TPU v5e)")
+    cases = [
+        ("qwen2.5-3b", "prefill_32k", 32768),
+        ("command-r-plus-104b", "prefill_32k", 32768),
+        ("dbrx-132b", "train_4k", 4096),
+        ("olmo-1b", "train_4k", 4096),
+    ]
+    print(f"{'arch':>22} {'shape':>12} {'bq':>5} {'bk':>5} {'st':>3} "
+          f"{'pred us':>9} {'bound':>6} {'vmem MB':>8}")
+    for arch, shape, seq in cases:
+        cfg = registry.get(arch)
+        w = AttnWorkload(name=f"{arch}-{shape}", B=1, L=seq, S=seq,
+                         H_kv=cfg.num_kv_heads, G=cfg.q_group_size,
+                         D=cfg.head_dim, causal=True)
+        plan = autotune_flash(w, TPU_V5E, causal=True)
+        print(f"{arch:>22} {shape:>12} {plan.block_q:>5} {plan.block_k:>5} "
+              f"{plan.stages:>3} {plan.predicted_us:>9.1f} "
+              f"{plan.bottleneck:>6} {plan.vmem_bytes/1e6:>8.2f}")
+    print("-> the framework picks kernel schedules by modeling the "
+          "pipeline,\n   exactly how FA3 picks T_M/T_N by profiling "
+          "(paper §2.2)\n")
+
+
+def study_c():
+    print("=" * 72)
+    print("C. What-if hardware sweep, Llama-3 70B @ 64K (H800 baseline)")
+    w = workload("70B", 65536, batch=1)
+    print(f"{'variant':>28} {'regime':>8} {'waves':>6} {'DRAM GB':>9} "
+          f"{'bottleneck':>11} {'latency ms':>11}")
+    variants = [
+        ("H800 (50MB L2, 132 SM)", {}),
+        ("2x L2 (100MB)", {"l2_bytes": 100 * 1024 * 1024}),
+        ("4x L2 (200MB)", {"l2_bytes": 200 * 1024 * 1024}),
+        ("2x SMs (264)", {"num_sms": 264}),
+        ("2x DRAM BW", {"dram_bw_gbps": 6700.0}),
+    ]
+    for name, kw in variants:
+        cfg = h800_variant(**kw)
+        rep = analytical.analyze(w, cfg)
+        print(f"{name:>28} {('ideal' if rep.ideal_regime else 'real'):>8} "
+              f"{rep.waves_per_group:>6} {rep.dram_bytes/1e9:>9.2f} "
+              f"{rep.bottleneck:>11} {rep.latency*1e3:>11.2f}")
+    print("-> more SMs / DRAM BW do not fix long-context attention; "
+          "SRAM\n   (L2 capacity -> regime, T_M -> intensity) does "
+          "(paper §3.6.2)\n")
+
+
+if __name__ == "__main__":
+    study_a()
+    study_b()
+    study_c()

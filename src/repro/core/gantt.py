@@ -1,0 +1,49 @@
+"""Pipeline Gantt chart extraction (paper Fig. 7).
+
+Renders the producer/consumer overlap and ping-pong scheduling of one SM as
+a text chart, and exports raw intervals for plotting.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+LANES = ("tma", "mma", "bubble")
+
+
+def lane_of(tag: str) -> str:
+    return tag.split(":", 1)[0]
+
+
+def filter_sm(gantt: List[Tuple[str, int, int]], cta_ids=(0, 1)):
+    """Keep intervals belonging to the given CTA ids (one SM's residents)."""
+    keep = tuple(f"cta{i}/" for i in cta_ids)
+    return [g for g in gantt
+            if any(k in g[0] for k in keep) or lane_of(g[0]) == "mma"
+            and any(k in g[0] for k in keep)]
+
+
+def render_text(gantt: List[Tuple[str, int, int]], width: int = 100,
+                t_max: int = 0) -> str:
+    """ASCII Gantt: one row per (lane, warpgroup)."""
+    if not gantt:
+        return "(empty gantt)"
+    t_end = t_max or max(e for _, _, e in gantt)
+    rows = {}
+    for tag, s, e in gantt:
+        lane = lane_of(tag)
+        wg = tag.split(":")[1] if ":" in tag else "?"
+        key = f"{wg}:{lane}"
+        rows.setdefault(key, []).append((s, e))
+    out = []
+    for key in sorted(rows):
+        line = [" "] * width
+        for s, e in rows[key]:
+            a = min(width - 1, int(s / t_end * width))
+            b = min(width, max(a + 1, int(e / t_end * width)))
+            ch = {"tma": "=", "mma": "#", "bubble": "~"}.get(key.split(":")[-1], "*")
+            for i in range(a, b):
+                line[i] = ch
+        out.append(f"{key:24s}|{''.join(line)}|")
+    out.append(f"{'legend':24s}|= TMA   # WGMMA   ~ softmax bubbles; "
+               f"0..{t_end} cycles|")
+    return "\n".join(out)

@@ -1,0 +1,90 @@
+"""Sim-FA instruction set (paper Table 3).
+
+Instructions are lightweight tuples (opcode + operands) produced by the
+trace generators and consumed by the engine. ``sid`` indexes mbarriers /
+ring-buffer stages, ``gid`` async commit groups, ``bid`` named barriers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# opcodes
+DEF_TMAP = "DEF_TMAP"
+TMA_TENSOR = "TMA_TENSOR"          # async HBM->SMEM tile load, signals sid
+MB_WAIT = "MB_WAIT"                # mbarrier.try_wait on sid
+ACQUIRE_STAGE = "ACQUIRE_STAGE"    # pipeline.producer_acquire
+RELEASE_STAGE = "RELEASE_STAGE"    # pipeline.consumer_release
+TMA_STORE = "TMA_STORE"            # async SMEM->HBM store in group gid
+TMA_COMMIT = "TMA_COMMIT"
+TMA_WAIT = "TMA_WAIT"              # block until <=N groups outstanding
+WGMMA = "WGMMA"                    # async MMA MxNxK into group gid
+WGMMA_COMMIT = "WGMMA_COMMIT"
+WGMMA_WAIT = "WGMMA_WAIT"
+BAR_ARRIVE = "BAR_ARRIVE"          # named barrier non-blocking signal
+BAR_WAIT = "BAR_WAIT"              # block until >=k arrives
+BUBBLES = "BUBBLES"                # CUDA-core work (softmax etc.)
+
+
+@dataclass(frozen=True)
+class TensorMap:
+    """cuTensorMapEncodeTiled analogue: enough metadata for hardware address
+    generation of a box (tile) anywhere in a strided tensor."""
+    map_id: int
+    base: int                      # byte address
+    dims: Tuple[int, ...]          # logical tensor dims (row-major outer..inner)
+    strides: Tuple[int, ...]       # byte strides per dim
+    box: Tuple[int, ...]           # tile shape in elements
+    esz: int                       # element size in bytes
+
+    def tile_lines(self, origin: Tuple[int, ...], line_bytes: int,
+                   dedup: bool = True):
+        """Generate the cache-line addresses touched by the tile at
+        ``origin``. With dedup=False, address generation is per *element*
+        ("If we generate requests for each element, many duplicate requests
+        will be generated" — §5.4): every element emits a request for its
+        containing line (ablation: 'No line deduplication', paper Table 5)."""
+        # innermost dim assumed contiguous (stride == esz)
+        inner = self.box[-1] * self.esz
+        lines = []
+        seen = set()
+
+        def rec(dim, addr):
+            if dim == len(self.box) - 1:
+                if dedup:
+                    start = addr
+                    end = addr + inner
+                    a = (start // line_bytes) * line_bytes
+                    while a < end:
+                        if a not in seen:
+                            seen.add(a)
+                            lines.append(a)
+                        a += line_bytes
+                else:
+                    for e in range(self.box[-1]):
+                        a = addr + e * self.esz
+                        lines.append((a // line_bytes) * line_bytes)
+                return
+            for i in range(self.box[dim]):
+                rec(dim + 1, addr + (origin[dim] + i) * self.strides[dim])
+
+        rec(0, self.base + origin[-1] * self.esz)
+        return lines
+
+
+@dataclass(frozen=True)
+class Instr:
+    op: str
+    # generic operand fields (interpretation depends on op)
+    sid: int = -1
+    gid: int = -1
+    bid: int = -1
+    n: int = 0                      # WGMMA_WAIT/TMA_WAIT N; BAR_WAIT k
+    m: int = 0                      # WGMMA M
+    k: int = 0                      # WGMMA K
+    cycles: int = 0                 # BUBBLES
+    map_id: int = -1                # TMA ops
+    origin: Tuple[int, ...] = ()    # TMA tile origin
+    bulk: bool = False              # non-tensor bulk copy: skips the
+                                    # descriptor-cache/TensorMap setup (Fig. 2)
+    tag: str = ""                   # debug label (e.g. "K", "V", "QK", "PV")

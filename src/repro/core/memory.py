@@ -1,0 +1,272 @@
+"""Sim-FA memory hierarchy: LRC coalescer -> sliced L2 -> DRAM channels.
+
+Models the timing-visible structures of the paper's §4.3/§5.4:
+  * L2 Request Coalescer (LRC): merges duplicate in-flight line requests
+    across each SM pair before they reach L2 (Table 5: no-LRC ablation).
+  * 80-slice L2, XOR hash ``slice = (line ^ (line >> 5)) % N`` (Table 5:
+    oversimplified-hash ablation uses the low bits instead).
+  * per-slice MSHRs (merge misses to the same line; stall when full),
+    near/far partition latency, write-back/write-allocate, alloc-on-fill.
+  * RemoteCopy proxy: far-partition hits probabilistically insert a shadow
+    line into the near partition, competing for capacity (paper Fig. 3).
+  * DRAM: per-channel queues at HBM aggregate bandwidth + fixed latency
+    (bandwidth/latency model in lieu of Ramulator; DESIGN.md §8).
+
+All requests are 128B lines. Completion is callback-based: the engine hands
+``(line_addr, sm_id, callback)``; the callback fires at absorb time.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from collections import OrderedDict, defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.machine import GPUMachine
+
+
+class EventQueue:
+    """Shared simulation event heap: (cycle, seq, fn, args)."""
+
+    def __init__(self):
+        self._h: List = []
+        self._seq = 0
+        self.now = 0            # cycle of the event currently executing
+
+    def push(self, cycle: int, fn: Callable, *args):
+        heapq.heappush(self._h, (cycle, self._seq, fn, args))
+        self._seq += 1
+
+    def pop_ready(self, cycle: int):
+        while self._h and self._h[0][0] <= cycle:
+            t, _, fn, args = heapq.heappop(self._h)
+            self.now = t
+            fn(*args)
+
+    def next_cycle(self) -> Optional[int]:
+        return self._h[0][0] if self._h else None
+
+    def __len__(self):
+        return len(self._h)
+
+
+class DRAM:
+    """Per-channel queueing bandwidth/latency model."""
+
+    def __init__(self, cfg: GPUMachine, evq: EventQueue, scale: float = 1.0):
+        self.cfg = cfg
+        self.evq = evq
+        n = max(1, int(round(cfg.dram_channels * scale)))
+        self.channels = n
+        self.free_at = [0] * n          # next cycle each channel can start
+        self.service = cfg.dram_line_service_cycles
+        self.bytes_served = 0
+
+    def access(self, cycle: int, line: int, cb: Callable):
+        ch = (line // self.cfg.line_bytes) % self.channels
+        start = max(cycle, self.free_at[ch])
+        self.free_at[ch] = start + self.service
+        self.bytes_served += self.cfg.line_bytes
+        self.evq.push(int(start + self.service + self.cfg.dram_latency), cb)
+
+
+class L2Slice:
+    """One L2 slice: LRU tags + MSHRs + near/far latency."""
+
+    def __init__(self, sid: int, cfg: GPUMachine, dram: DRAM, evq: EventQueue,
+                 lines_capacity: int):
+        self.sid = sid
+        self.cfg = cfg
+        self.dram = dram
+        self.evq = evq
+        self.capacity = max(16, lines_capacity)
+        self.tags: "OrderedDict[int, bool]" = OrderedDict()  # line -> dirty
+        self.mshr: Dict[int, List[Callable]] = {}
+        self.stalled: deque = deque()   # requests waiting for an MSHR
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.mshr_merges = 0
+        self.rc_inserts = 0
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.tags) / self.capacity
+
+    def _insert(self, line: int, dirty: bool = False):
+        if line in self.tags:
+            self.tags.move_to_end(line)
+            return
+        self.tags[line] = dirty
+        if len(self.tags) > self.capacity:
+            self.tags.popitem(last=False)   # LRU evict (write-back not timed)
+
+    def access(self, cycle: int, line: int, far: bool, cb: Callable,
+               write: bool = False):
+        # a full MSHR pool stalls the whole request path for this slice
+        # (head-of-line blocking): hits behind the stall wait too (§4.3,
+        # "once it fills, no new misses can be issued to DRAM")
+        if self.stalled:
+            self.stalled.append((line, far, cb, write))
+            return
+        self._access(cycle, line, far, cb, write)
+
+    def _access(self, cycle: int, line: int, far: bool, cb: Callable,
+                write: bool = False):
+        lat = self.cfg.l2_far_latency if far else self.cfg.l2_near_latency
+        if line in self.tags:
+            self.hits += 1
+            self.tags.move_to_end(line)
+            if write:
+                self.tags[line] = True
+            self.evq.push(cycle + lat, cb)
+            return
+        # miss
+        if line in self.mshr:               # MSHR hit: merge
+            self.mshr_merges += 1
+            self.mshr[line].append(cb)
+            return
+        if len(self.mshr) >= self.cfg.l2_mshr_per_slice:
+            self.stalled.append((line, far, cb, write))
+            return
+        self.misses += 1
+        self.mshr[line] = [cb]
+
+        def fill():
+            self._insert(line, dirty=write)      # alloc-on-fill
+            waiters = self.mshr.pop(line, [])
+            for w in waiters:
+                w()
+            # drain the stalled request path now that an MSHR freed up
+            while self.stalled and len(self.mshr) < self.cfg.l2_mshr_per_slice:
+                l2, f2, c2, w2 = self.stalled.popleft()
+                self._access(self.evq.now, l2, f2, c2, w2)
+
+        self.dram.access(cycle + lat, line, fill)
+
+
+class L2Cache:
+    """Sliced L2 with XOR hash, two partitions, and the RemoteCopy proxy."""
+
+    def __init__(self, cfg: GPUMachine, dram: DRAM, evq: EventQueue,
+                 scale: float = 1.0, seed: int = 0):
+        self.cfg = cfg
+        self.evq = evq
+        n = max(2, int(round(cfg.l2_slices * scale)))
+        per_slice_lines = int(cfg.l2_bytes * scale) // cfg.line_bytes // n
+        self.slices = [L2Slice(i, cfg, dram, evq, per_slice_lines)
+                       for i in range(n)]
+        self.n = n
+        self.rng = random.Random(seed)
+        self.requests = 0
+
+    def slice_of(self, line_addr: int) -> int:
+        line = line_addr // self.cfg.line_bytes
+        if self.cfg.xor_hash:
+            return (line ^ (line >> 5)) % self.n
+        return line % self.n           # ablation: low bits only
+
+    def access(self, cycle: int, line_addr: int, sm_id: int, cb: Callable,
+               write: bool = False):
+        self.requests += 1
+        s = self.slice_of(line_addr)
+        sl = self.slices[s]
+        # partition: slices [0, n/2) near SMs [0, num_sms/2), else far
+        near_part = 0 if sm_id < self.cfg.num_sms // 2 else 1
+        slice_part = 0 if s < self.n // 2 else 1
+        far = near_part != slice_part
+
+        if far and self.cfg.remote_copy:
+            # behavioral RemoteCopy proxy (§4.3): far lines get mirrored into
+            # the requester-side twin slice. Mirrors (a) serve later reads at
+            # near latency — the L2-hit floor — and (b) compete with regular
+            # lines for capacity, which halves the effective L2 for shared
+            # working sets: the 25 MB boundary of §6.2.2 and the 25-50 MB
+            # fluctuating transition window of Fig. 3.
+            mirror = self.slices[(s + self.n // 2) % self.n]
+            if line_addr in mirror.tags:
+                if write:
+                    mirror.tags.pop(line_addr, None)   # keep mirrors clean
+                else:
+                    mirror.hits += 1
+                    mirror.tags.move_to_end(line_addr)
+                    self.evq.push(cycle + self.cfg.l2_near_latency, cb)
+                    return
+            elif (not write and line_addr in sl.tags
+                  and mirror.occupancy < self.cfg.rc_occupancy_threshold
+                  and self.rng.random() < self.cfg.rc_max_prob):
+                mirror._insert(line_addr)
+                mirror.rc_inserts += 1
+        sl.access(cycle, line_addr, far, cb, write)
+
+    # stats -----------------------------------------------------------------
+    def stats(self):
+        agg = defaultdict(int)
+        for sl in self.slices:
+            agg["hits"] += sl.hits
+            agg["misses"] += sl.misses
+            agg["mshr_merges"] += sl.mshr_merges
+            agg["rc_inserts"] += sl.rc_inserts
+        agg["requests"] = self.requests
+        return dict(agg)
+
+
+class LRC:
+    """L2 Request Coalescer: merges duplicate outstanding line requests from
+    an SM pair (paper §5.4). Without it every CTA's TMA traffic reaches L2."""
+
+    def __init__(self, cfg: GPUMachine, l2: L2Cache):
+        self.cfg = cfg
+        self.l2 = l2
+        self.pending: Dict[Tuple[int, int], List[Callable]] = {}
+        self.merged = 0
+
+    def request(self, cycle: int, line_addr: int, sm_id: int, cb: Callable,
+                write: bool = False):
+        if not self.cfg.lrc_enabled or write:
+            self.l2.access(cycle, line_addr, sm_id, cb, write)
+            return
+        key = (sm_id // 2, line_addr)
+        if key in self.pending:
+            self.merged += 1
+            self.pending[key].append(cb)
+            return
+        self.pending[key] = [cb]
+
+        def done():
+            for w in self.pending.pop(key, []):
+                w()
+
+        self.l2.access(cycle, line_addr, sm_id, done)
+
+
+class DirectHBM:
+    """TPU-mode memory front end: no shared L2 between cores and HBM —
+    requests go straight to the DRAM channel model plus a fixed latency."""
+
+    def __init__(self, cfg: GPUMachine, dram: DRAM, evq: EventQueue):
+        self.cfg = cfg
+        self.dram = dram
+        self.evq = evq
+        self.merged = 0
+        self.requests = 0
+
+    def request(self, cycle: int, line_addr: int, sm_id: int, cb: Callable,
+                write: bool = False):
+        self.requests += 1
+        self.dram.access(cycle, line_addr, cb)
+
+    def stats(self):
+        return {"requests": self.requests, "hits": 0, "misses": self.requests,
+                "mshr_merges": 0, "rc_inserts": 0}
+
+
+def build_memory(cfg: GPUMachine, evq: EventQueue, scale: float = 1.0,
+                 seed: int = 0, direct: bool = False):
+    dram = DRAM(cfg, evq, scale)
+    if direct:
+        front = DirectHBM(cfg, dram, evq)
+        return front, front, dram
+    l2 = L2Cache(cfg, dram, evq, scale, seed)
+    lrc = LRC(cfg, l2)
+    return lrc, l2, dram

@@ -1,0 +1,77 @@
+"""SimFA-TPU analytical model: the paper's §3 traffic methodology mapped to
+the TPU memory hierarchy (DESIGN.md §3).
+
+"L2 traffic" ↦ core-side demand traffic (VMEM fills), "DRAM" ↦ HBM. The
+wave model becomes a Q-row-block model: each of ceil(L/bq) grid rows
+re-streams the K/V head from HBM unless the whole K/V head fits the VMEM
+budget (the Eq. 4 analogue — on TPU the refetch factor is structural, set
+by the kernel's loop order, not by cache capacity luck).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.machine import TPUMachine, TPU_V5E
+from repro.core.tpu.machine import mxu_efficiency
+
+
+@dataclass(frozen=True)
+class TPUTrafficReport:
+    flops: float
+    hbm_bytes_ideal: float          # K/V resident in VMEM (Eq. 3 analogue)
+    hbm_bytes_real: float           # refetch per Q row block (Eq. 6 analogue)
+    kv_resident: bool               # Eq. 4 analogue
+    refetch_factor: int
+    vmem_tile_bytes: int            # working set claimed by the BlockSpecs
+    t_compute: float
+    t_hbm: float
+    t_vpu: float
+
+    @property
+    def hbm_bytes(self):
+        return self.hbm_bytes_ideal if self.kv_resident else self.hbm_bytes_real
+
+    @property
+    def latency(self) -> float:
+        return max(self.t_compute, self.t_hbm, self.t_vpu)
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"mxu": self.t_compute, "hbm": self.t_hbm, "vpu": self.t_vpu}
+        return max(t, key=t.get)
+
+
+def analyze_tpu(w: AttnWorkload, tpu: TPUMachine = TPU_V5E, *, bq: int = 128,
+                bk: int = 128, stages: int = 2, causal: bool = True,
+                vmem_budget_frac: float = 0.6) -> TPUTrafficReport:
+    H_q = w.H_kv * w.G
+    causal_f = 0.5 if causal else 1.0
+    flops = 4.0 * w.B * H_q * w.L * w.S * w.D * causal_f
+
+    P = w.P
+    q_o = 2 * P * w.B * H_q * w.L * w.D
+    kv_once = 2 * P * w.B * w.H_kv * w.S * w.D
+    n_rows = math.ceil(w.L / bq)                     # Q row blocks per head
+    # GQA: G consecutive q-heads share a KV head; a core streams the KV head
+    # once per (q-head, row-block) -> refetch = G * n_rows (per chip, single
+    # core; multi-chip head-sharding divides both sides equally)
+    refetch = max(1, G_rows := w.G * n_rows)
+    kv_head_bytes = 2 * P * w.S * w.D
+    kv_resident = kv_head_bytes <= tpu.vmem_bytes * vmem_budget_frac
+    ideal = q_o + kv_once
+    real = q_o + kv_once * refetch * causal_f
+    vmem_tile = P * (bq * w.D + 2 * stages * bk * w.D) + 4 * bq * w.D + 4 * bq * bk
+
+    eff = min(mxu_efficiency(tpu, bq, bk), mxu_efficiency(tpu, bq, w.D))
+    t_c = flops / (tpu.peak_tflops_bf16 * 1e12 * eff)
+    t_h = (ideal if kv_resident else real) / (tpu.hbm_gbps * 1e9)
+    # VPU: ~4 elementwise passes over the score tiles
+    score_elems = w.B * H_q * w.L * w.S * causal_f
+    vpu_ops_per_s = tpu.vpu_exp_per_cycle * tpu.freq_ghz * 1e9
+    t_v = 2.0 * score_elems / vpu_ops_per_s
+    return TPUTrafficReport(
+        flops=flops, hbm_bytes_ideal=ideal, hbm_bytes_real=real,
+        kv_resident=kv_resident, refetch_factor=refetch,
+        vmem_tile_bytes=int(vmem_tile), t_compute=t_c, t_hbm=t_h, t_vpu=t_v)

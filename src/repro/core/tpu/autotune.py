@@ -1,0 +1,87 @@
+"""Sim-guided kernel autotuning: pick flash-attention block sizes the way
+FA3 picks T_M/T_N — by modeling the pipeline, not by hand (paper §2.2: "the
+final pipeline stages and block sizes are determined through profiling"; we
+substitute SimFA-TPU for the profiler).
+
+``autotune_flash`` sweeps (block_q, block_k, stages) through the analytical
+model, short-lists by predicted latency, then (optionally) cycle-simulates
+the short-list for the final pick. The framework consumes this through
+``kernel_plan`` in ops/benchmarks and §Perf.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.engine import Engine
+from repro.core.machine import TPUMachine, TPU_V5E
+from repro.core.tpu.analytical import analyze_tpu
+from repro.core.tpu.machine import tpu_engine_machine
+from repro.core.tpu.tracegen import flash_grid_trace
+
+BLOCK_CHOICES = (64, 128, 256, 512)
+STAGE_CHOICES = (2, 3)
+
+
+@dataclass
+class KernelPlan:
+    block_q: int
+    block_k: int
+    stages: int
+    predicted_us: float
+    bottleneck: str
+    vmem_bytes: int
+    sim_us: Optional[float] = None
+
+
+def _fits_vmem(w, bq, bk, stages, tpu, frac=0.7) -> bool:
+    rep = analyze_tpu(w, tpu, bq=bq, bk=bk, stages=stages)
+    return rep.vmem_tile_bytes <= tpu.vmem_bytes * frac
+
+
+def autotune_flash(w: AttnWorkload, tpu: TPUMachine = TPU_V5E, *,
+                   causal: bool = True, use_sim: bool = False,
+                   sim_rows: int = 2, top_k: int = 3) -> KernelPlan:
+    cands: List[KernelPlan] = []
+    for bq in BLOCK_CHOICES:
+        if bq > w.L:
+            continue
+        for bk in BLOCK_CHOICES:
+            if bk > w.S:
+                continue
+            for st in STAGE_CHOICES:
+                if not _fits_vmem(w, bq, bk, st, tpu):
+                    continue
+                rep = analyze_tpu(w, tpu, bq=bq, bk=bk, stages=st,
+                                  causal=causal)
+                cands.append(KernelPlan(
+                    block_q=bq, block_k=bk, stages=st,
+                    predicted_us=rep.latency * 1e6,
+                    bottleneck=rep.bottleneck,
+                    vmem_bytes=rep.vmem_tile_bytes))
+    if not cands:
+        return KernelPlan(min(128, w.L), min(128, w.S), 2, 0.0, "mxu", 0)
+    # tie-break equal latencies toward larger tiles (fewer grid steps,
+    # better DMA amortization)
+    cands.sort(key=lambda c: (round(c.predicted_us, 3), -c.block_q * c.block_k))
+    if not use_sim:
+        return cands[0]
+
+    # cycle-simulate the analytical short-list on a few grid rows
+    best = None
+    for c in cands[:top_k]:
+        cta, tmaps = flash_grid_trace(
+            w, tpu, bq=c.block_q, bk=c.block_k, stages=c.stages,
+            causal=causal, max_grid_rows=sim_rows)
+        eng = Engine(tpu_engine_machine(tpu), n_sms=1, mem_scale=1.0,
+                     direct_hbm=True)
+        for tm in tmaps.values():
+            eng.define_tmap(tm)
+        eng.launch([cta])
+        st = eng.run()
+        c.sim_us = st["time_us"]
+        if best is None or c.sim_us < best.sim_us:
+            best = c
+    return best

@@ -1,0 +1,67 @@
+"""TPU v5e core model for the Sim-FA engine (hardware adaptation, DESIGN §3).
+
+The event engine is reused with TPU semantics:
+  * one "SM" = one TensorCore; the single "CTA" = the Pallas grid walk;
+  * producer WG = the async DMA engine streaming HBM->VMEM tiles (the TMA
+    analogue: same ACQUIRE/RELEASE ring-buffer discipline Mosaic's
+    multi-buffered pipeline implements in hardware);
+  * consumer WG = MXU matmuls (WGMMA instrs with precomputed cycles) + VPU
+    softmax (BUBBLES);
+  * memory = DirectHBM (no shared L2 on TPU; bandwidth/latency channels).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+from repro.core.machine import GPUMachine, TPUMachine, TPU_V5E
+
+
+def tpu_engine_machine(tpu: TPUMachine = TPU_V5E) -> GPUMachine:
+    """GPUMachine-shaped parameterization of one TPU chip for the engine."""
+    bytes_per_cycle = tpu.hbm_gbps * 1e9 / (tpu.freq_ghz * 1e9)
+    lines_per_cycle = max(1, int(round(bytes_per_cycle / 128)))
+    return GPUMachine(
+        name=tpu.name,
+        freq_ghz=tpu.freq_ghz,
+        num_sms=tpu.num_cores,
+        peak_tflops_fp16=tpu.peak_tflops_bf16,
+        wgmma_issue_buffer=16,
+        wgmma_n_cycles_divisor=2.0,          # unused: cycles precomputed
+        issue_width=1,
+        tma_lines_per_cycle=lines_per_cycle, # DMA streaming rate cap
+        tma_max_inflight_lines=4096,         # deep HBM pipelining
+        tma_launch_latency=tpu.dma_launch_latency,
+        tma_tmap_setup_latency=0,            # BlockSpec: no descriptor cache
+        l2_bytes=0, l2_slices=2,             # unused in direct mode
+        lrc_enabled=False, remote_copy=False,
+        dram_channels=16,
+        dram_bw_gbps=tpu.hbm_gbps,
+        dram_latency=int(500 * tpu.freq_ghz),   # ~500ns HBM latency
+        occupancy_limit=1,                   # one resident grid per core
+    )
+
+
+def mxu_cycles(tpu: TPUMachine, m: int, n: int, k: int) -> int:
+    """Cycles for an (m,k)x(k,n) bf16 matmul: operands pad to the 128x128
+    systolic tile, so sub-128 block dims waste MXU occupancy."""
+    mt, nt = tpu.mxu_shape
+    m_pad = math.ceil(m / mt) * mt
+    n_pad = math.ceil(n / nt) * nt
+    return max(1, int(math.ceil(m_pad * n_pad * k / tpu.mxu_macs_per_cycle)))
+
+
+def mxu_efficiency(tpu: TPUMachine, m: int, n: int) -> float:
+    mt, nt = tpu.mxu_shape
+    m_pad = math.ceil(m / mt) * mt
+    n_pad = math.ceil(n / nt) * nt
+    return (m * n) / (m_pad * n_pad)
+
+
+def vpu_softmax_cycles(tpu: TPUMachine, rows: int, cols: int) -> int:
+    """Online-softmax VPU work for one (rows x cols) score tile:
+    rowmax + exp + rowsum + rescale accumulate."""
+    elems = rows * cols
+    expc = math.ceil(elems / tpu.vpu_exp_per_cycle)
+    other = math.ceil(3 * elems / tpu.vpu_flops_per_cycle)
+    return expc + other

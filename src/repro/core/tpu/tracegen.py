@@ -1,0 +1,133 @@
+"""Trace generation for OUR Pallas flash-attention kernel on TPU.
+
+Walks the same (b, h, i, j) grid as kernels/flash_attention.py and emits the
+pipeline the Mosaic compiler builds: multi-buffered async DMA of K/V tiles
+(ring stages, the TMA analogue) overlapped with MXU matmuls and VPU softmax.
+This is the TPU-mode counterpart of tracegen_fa3.py (hardware adaptation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core import isa
+from repro.core.engine import CTATrace
+from repro.core.isa import Instr, TensorMap
+from repro.core.machine import TPUMachine, TPU_V5E
+from repro.core.tpu.machine import mxu_cycles, vpu_softmax_cycles
+
+TM_Q, TM_K, TM_V, TM_O = 0, 1, 2, 3
+
+
+def tpu_tmaps(w: AttnWorkload, bq: int, bk: int) -> Dict[int, TensorMap]:
+    P = w.P
+    H_q = w.H_kv * w.G
+    sz_q = w.B * H_q * w.L * w.D * P
+    sz_kv = w.B * w.H_kv * w.S * w.D * P
+    return {
+        TM_Q: TensorMap(TM_Q, 0, (w.B * H_q, w.L, w.D),
+                        (w.L * w.D * P, w.D * P, P), (1, bq, w.D), P),
+        TM_K: TensorMap(TM_K, sz_q, (w.B * w.H_kv, w.S, w.D),
+                        (w.S * w.D * P, w.D * P, P), (1, bk, w.D), P),
+        TM_V: TensorMap(TM_V, sz_q + sz_kv, (w.B * w.H_kv, w.S, w.D),
+                        (w.S * w.D * P, w.D * P, P), (1, bk, w.D), P),
+        TM_O: TensorMap(TM_O, sz_q + 2 * sz_kv, (w.B * H_q, w.L, w.D),
+                        (w.L * w.D * P, w.D * P, P), (1, bq, w.D), P),
+    }
+
+
+def flash_grid_trace(w: AttnWorkload, tpu: TPUMachine = TPU_V5E, *,
+                     bq: int = 128, bk: int = 128, stages: int = 2,
+                     causal: bool = True, defer_pv_wait: bool = True,
+                     max_grid_rows: int | None = None) -> Tuple[CTATrace, Dict[int, TensorMap]]:
+    """One TensorCore's sequential walk over the flash grid.
+
+    Producer(DMA) / consumer(MXU+VPU) as two logical threads sharing a
+    ``stages``-deep VMEM ring buffer — exactly the Pallas pipeline.
+    """
+    H_q = w.H_kv * w.G
+    n_i = math.ceil(w.L / bq)
+    n_j_full = math.ceil(w.S / bk)
+    qk_cyc = mxu_cycles(tpu, bq, bk, w.D)
+    pv_cyc = mxu_cycles(tpu, bq, w.D, bk)
+    sm_cyc = vpu_softmax_cycles(tpu, bq, bk)
+
+    prod: List[Instr] = []
+    cons: List[Instr] = []
+    rows = 0
+    gid = 0
+    for bh in range(w.B * H_q):
+        hkv = (bh % H_q) // w.G
+        for i in range(n_i):
+            if max_grid_rows and rows >= max_grid_rows:
+                break
+            rows += 1
+            n_j = n_j_full if not causal else min(
+                n_j_full, math.ceil(((i + 1) * bq) / bk))
+            # Q tile for this row of the grid
+            qsid = 90 + (rows % 4)
+            prod.append(Instr(isa.TMA_TENSOR, map_id=TM_Q, sid=qsid,
+                              origin=(bh, i * bq, 0), tag=f"Q{i}"))
+            cons.append(Instr(isa.MB_WAIT, sid=qsid))
+
+            def _load(j):
+                sk = 2 * (j % stages)
+                prod.append(Instr(isa.ACQUIRE_STAGE, sid=sk))
+                prod.append(Instr(isa.TMA_TENSOR, map_id=TM_K, sid=sk,
+                                  origin=(hkv, j * bk, 0), tag=f"K{j}"))
+                prod.append(Instr(isa.ACQUIRE_STAGE, sid=sk + 1))
+                prod.append(Instr(isa.TMA_TENSOR, map_id=TM_V, sid=sk + 1,
+                                  origin=(hkv, j * bk, 0), tag=f"V{j}"))
+
+            # software-pipelined consumer: QK_{j+1} issues before softmax_j
+            # so the MXU overlaps the VPU (Mosaic's cross-iteration ILP).
+            qk_gid = {}
+            for j in range(n_j):
+                _load(j)
+            cons.append(Instr(isa.MB_WAIT, sid=0))
+            cons.append(Instr(isa.WGMMA, gid=gid, m=bq, n=bk, k=w.D,
+                              cycles=qk_cyc, tag="QK0"))
+            cons.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+            qk_gid[0] = gid
+            gid += 1
+            prev_pv = None   # (gid, sv) of the previous iteration's PV
+            for j in range(n_j):
+                sk, sv = 2 * (j % stages), 2 * (j % stages) + 1
+                if j + 1 < n_j:
+                    skn = 2 * ((j + 1) % stages)
+                    cons.append(Instr(isa.MB_WAIT, sid=skn))
+                    cons.append(Instr(isa.WGMMA, gid=gid, m=bq, n=bk, k=w.D,
+                                      cycles=qk_cyc, tag=f"QK{j+1}"))
+                    cons.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+                    qk_gid[j + 1] = gid
+                    gid += 1
+                cons.append(Instr(isa.WGMMA_WAIT, gid=qk_gid[j], n=0))
+                cons.append(Instr(isa.RELEASE_STAGE, sid=sk))
+                cons.append(Instr(isa.BUBBLES, cycles=sm_cyc))
+                cons.append(Instr(isa.MB_WAIT, sid=sv))
+                cons.append(Instr(isa.WGMMA, gid=gid, m=bq, n=w.D, k=bk,
+                                  cycles=pv_cyc, tag=f"PV{j}"))
+                cons.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+                if defer_pv_wait:
+                    # §Perf iteration 1: wait on the PREVIOUS PV instead of
+                    # the one just issued — PV_j computes under softmax_{j+1}
+                    # (needs stages >= 2 so V_j's slot isn't recycled early)
+                    if prev_pv is not None:
+                        cons.append(Instr(isa.WGMMA_WAIT, gid=prev_pv[0], n=1))
+                        cons.append(Instr(isa.RELEASE_STAGE, sid=prev_pv[1]))
+                    prev_pv = (gid, sv)
+                else:
+                    cons.append(Instr(isa.WGMMA_WAIT, gid=gid, n=0))
+                    cons.append(Instr(isa.RELEASE_STAGE, sid=sv))
+                gid += 1
+            if defer_pv_wait and prev_pv is not None:
+                cons.append(Instr(isa.WGMMA_WAIT, gid=prev_pv[0], n=0))
+                cons.append(Instr(isa.RELEASE_STAGE, sid=prev_pv[1]))
+            cons.append(Instr(isa.TMA_STORE, map_id=TM_O, gid=gid,
+                              origin=(bh, i * bq, 0), tag=f"O{i}"))
+            cons.append(Instr(isa.TMA_COMMIT, gid=gid))
+            cons.append(Instr(isa.TMA_WAIT, gid=gid, n=0))
+            gid += 1
+    return (CTATrace(wgs=[prod, cons], n_consumers=1, name="tpu-flash"),
+            tpu_tmaps(w, bq, bk))

@@ -1,0 +1,130 @@
+"""FlashAttention forward Pallas TPU kernel (the paper's subject workload).
+
+TPU-native adaptation of the FA3 pipeline (DESIGN.md §3): the producer/
+consumer WarpGroup split becomes the Mosaic grid pipeline — the async DMA
+engine double-buffers the next (K, V) tile into VMEM (the TMA analogue)
+while the MXU consumes the current one; softmax (VPU) overlaps the MXU the
+way FA3's ping-pong consumers overlap WGMMA.
+
+Tiling: grid (B, H, L/block_q, S/block_k), S innermost ("arbitrary" —
+carries the online-softmax state in VMEM scratch across j). Block sizes come
+from core/tpu/autotune.py (SimFA-TPU picks them by modeling the pipeline,
+mirroring how FA3 picks T_M/T_N by profiling).
+
+GQA: KV index maps h -> h // G so all G query heads of a KV head reuse the
+same K/V tiles (the L2-reuse structure the paper's Eq. 2 counts).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, causal: bool, block_q: int, block_k: int,
+                      seq_k: int):
+    i = pl.program_id(2)          # q block index
+    j = pl.program_id(3)          # kv block index
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols >= seq_k
+        if causal:
+            mask |= cols > rows
+        s = jnp.where(mask, NEG_INF, s)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # causal block skip: tiles strictly above the triangle are no-ops
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "debug"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False, debug: bool = False):
+    """q: (B, H, L, D); k/v: (B, Hkv, S, D) -> (B, H, L, D)."""
+    B, H, L, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, L)
+    bk = min(block_k, S)
+    # pad sequence dims to block multiples (masked out in-kernel)
+    Lp, Sp = -(-L // bq) * bq, -(-S // bk) * bk
+    if Lp != L:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Lp - L), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+
+    grid = (B, H, Lp // bq, Sp // bk)
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal,
+        block_q=bq, block_k=bk, seq_k=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        debug=debug,
+    )(q, k, v)
+    return out[:, :, :L]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (sweep-tested in tests/)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,L,D); k/v: (B,Hkv,S,D). Materializing softmax reference."""
+    B, H, L, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, L, D).astype(jnp.float32)
+    s = jnp.einsum("bhgld,bhsd->bhgls", qg, k.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(S)[None, :] > jnp.arange(L)[:, None]
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgls,bhsd->bhgld", p, v.astype(jnp.float32))
+    return o.reshape(B, H, L, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, cache_len):
+    """q: (B,H,D); caches: (B,Hkv,S,D)."""
+    B, H, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

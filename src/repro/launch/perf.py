@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower+compile ONE cell with plan overrides and
+print the three roofline terms (before/after comparisons drive the
+hypothesis->change->measure loop recorded in EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.perf --arch grok-1-314b \
+        --shape train_4k --set cast_params=bfloat16 --set grad_acc_sharded=1
+
+Appends each measurement to results/perf_log.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import run_cell
+
+LOG = Path("results/perf_log.json")
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="CellPlan override")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.mesh == "multi")
+    mesh_kind = ("multi_pod_2x16x16" if args.mesh == "multi"
+                 else "single_pod_16x16")
+
+    overrides = {}
+    for s in args.set:
+        k, v = s.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    base_plan = specs_lib.plan_cell(cfg, shape, mesh)
+    plan = dataclasses.replace(base_plan, **overrides)
+    print(f"plan: {plan}")
+
+    t0 = time.time()
+    rec = run_cell(cfg, shape, mesh, mesh_kind, plan=plan)
+    r = roofline.analyze_record(f"{args.arch}|{args.shape}|{mesh_kind}", rec)
+    out = {
+        "tag": args.tag or ",".join(args.set) or "baseline",
+        "arch": args.arch, "shape": args.shape, "mesh": mesh_kind,
+        "overrides": overrides,
+        "t_compute_s": r["t_compute_s"],
+        "t_memory_s": r["t_memory_s"],
+        "t_collective_s": r["t_collective_s"],
+        "bottleneck": r["bottleneck"],
+        "useful_flops_ratio": r["useful_flops_ratio"],
+        "roofline_fraction": r["roofline_fraction"],
+        "peak_gb": rec["mem"]["peak_bytes"] / 1e9,
+        "collectives": rec["collectives"],
+        "wall_s": round(time.time() - t0, 1),
+    }
+    print(json.dumps(out, indent=1))
+    log = json.loads(LOG.read_text()) if LOG.exists() else []
+    log.append(out)
+    LOG.write_text(json.dumps(log, indent=1))
+
+
+if __name__ == "__main__":
+    main()

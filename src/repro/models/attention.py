@@ -1,0 +1,207 @@
+"""Attention: GQA projections + FlashAttention-style chunked online softmax.
+
+``flash_ref`` is the pure-jnp online-softmax implementation (algorithmically
+FlashAttention, scanned over KV chunks) used (a) as the oracle for the Pallas
+kernels and (b) as the lowering path in the multi-pod dry-run (Pallas TPU
+kernels do not lower on the CPU host platform; see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import ctx as pctx
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations
+# ---------------------------------------------------------------------------
+
+def attention_naive(q, k, v, *, causal: bool, q_offset=0):
+    """Materializing reference. q:(B,L,H,D) k/v:(B,S,Hkv,D) -> (B,L,H,D)."""
+    B, L, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, L, Hkv, G, D)
+    s = jnp.einsum("blhgd,bshd->bhgls", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(D)
+    if causal:
+        row = jnp.arange(L)[:, None] + q_offset
+        col = jnp.arange(S)[None, :]
+        s = jnp.where(col <= row, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgls,bshd->blhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, L, H, D).astype(q.dtype)
+
+
+def flash_ref(q, k, v, *, causal: bool, q_offset=0, chunk: int = 512,
+              pv_bf16: bool = False):
+    """Online-softmax attention scanned over KV chunks (pure jnp).
+
+    Never materializes the (L, S) score matrix for more than one KV chunk;
+    this is the FlashAttention dataflow expressed at the XLA level.
+    ``pv_bf16`` stores the probability tile at half width for the PV matmul
+    (FA3 §5.2 does exactly this FP32->FP16 conversion before P@V) — §Perf
+    knob that cuts the dominant score-tile HBM traffic.
+    """
+    B, L, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, L, Hkv, G, D).astype(jnp.float32) * (1.0 / math.sqrt(D))
+    row = jnp.arange(L)[:, None] + q_offset
+
+    def body(carry, kv):
+        m, l, acc, j = carry
+        kj, vj = kv
+        s = jnp.einsum("blhgd,bchd->blhgc", qg, kj.astype(jnp.float32))
+        col = j * chunk + jnp.arange(chunk)[None, :]          # (1, chunk)
+        if causal:
+            mask = (col > row) | (col >= S)                   # (L, chunk)
+        else:
+            mask = jnp.broadcast_to(col >= S, (L, chunk))
+        s = jnp.where(mask[None, :, None, None, :], NEG_INF, s)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if pv_bf16:
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "blhgc,bchd->blhgd", p.astype(jnp.bfloat16),
+                vj.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+        else:
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "blhgc,bchd->blhgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((B, L, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, L, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, L, Hkv, G, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (kc, vc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, L, H, D).astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, cache_len, *, q_offset=None):
+    """Single-token decode over a (possibly longer-than-filled) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, Hkv, D); cache_len: scalar or (B,)
+    Positions >= cache_len are masked.
+    """
+    B, L, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, L, Hkv, G, D).astype(jnp.float32) * (1.0 / math.sqrt(D))
+    s = jnp.einsum("blhgd,bshd->blhgs", qg, k_cache.astype(jnp.float32))
+    # seq-sharded caches: keep scores sharded on S (partial-softmax psum)
+    # instead of letting XLA all-gather the cache per layer
+    s = pctx.constrain(s, "scores_dec")
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(cache_len), (B,))[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("blhgs,bshd->blhgd", p, v_cache.astype(jnp.float32))
+    o = o / jnp.sum(p, axis=-1)[..., None]
+    return o.reshape(B, L, H, D).astype(q.dtype)
+
+
+def decode_attend_partial(q, k_shard, v_shard, valid_mask):
+    """Shard-local flash decode for sequence-sharded KV caches (SP).
+
+    Returns (o_partial(fp32), m(fp32), l(fp32)) for a distributed
+    log-sum-exp merge across sequence shards (see merge_partial_attn).
+    q: (B,1,H,D); k/v_shard: (B,S_loc,Hkv,D); valid_mask: (B,S_loc) bool.
+    """
+    B, L, H, D = q.shape
+    Hkv = k_shard.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, L, Hkv, G, D).astype(jnp.float32) * (1.0 / math.sqrt(D))
+    s = jnp.einsum("blhgd,bshd->blhgs", qg, k_shard.astype(jnp.float32))
+    s = jnp.where(valid_mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("blhgs,bshd->blhgd", p, v_shard.astype(jnp.float32))
+    return o, m, l
+
+
+def merge_partial_attn(o_parts, m_parts, l_parts, axis=0):
+    """Merge per-shard (o, m, l) partials along a leading shard axis."""
+    m = jnp.max(m_parts, axis=axis)
+    corr = jnp.exp(m_parts - jnp.expand_dims(m, axis))
+    l = jnp.sum(l_parts * corr, axis=axis)
+    o = jnp.sum(o_parts * corr[..., None], axis=axis)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d, cfg.num_heads * hd, bias=cfg.qkv_bias or cfg.bias),
+        "wk": layers.dense_init(ks[1], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias or cfg.bias),
+        "wv": layers.dense_init(ks[2], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias or cfg.bias),
+        "wo": layers.dense_init(ks[3], cfg.num_heads * hd, d, bias=cfg.bias),
+    }
+
+
+def attn_apply(p, x, cfg, *, positions, kv_cache=None, cache_index=None,
+               cross_kv=None, attn_fn=None, use_rope=True):
+    """Returns (out, new_kv) where new_kv is (k, v) of this call's tokens.
+
+    kv_cache: optional (k_cache, v_cache) of shape (B, S_max, Hkv, D) --
+    decode path (x is (B,1,d)). cross_kv: precomputed (k, v) for
+    cross-attention (no rope, no cache write).
+    """
+    B, L, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    q = layers.dense(p["wq"], x, dtype=dt).reshape(B, L, H, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        if use_rope:
+            q = layers.rope(q, positions, cfg.rope_theta)
+        o = (attn_fn or flash_ref)(q, k, v, causal=False)
+        return layers.dense(p["wo"], o.reshape(B, L, H * hd), dtype=dt), None
+
+    k = layers.dense(p["wk"], x, dtype=dt).reshape(B, L, Hkv, hd)
+    v = layers.dense(p["wv"], x, dtype=dt).reshape(B, L, Hkv, hd)
+    if use_rope:
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        idx = cache_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        o = decode_attend(q, k_cache, v_cache, idx + L)
+        out = layers.dense(p["wo"], o.reshape(B, L, H * hd), dtype=dt)
+        return out, (k_cache, v_cache)
+
+    o = (attn_fn or flash_ref)(q, k, v, causal=cfg.causal)
+    out = layers.dense(p["wo"], o.reshape(B, L, H * hd), dtype=dt)
+    # keep collected KV sharded (prefill cache assembly): without this the
+    # scan's stacked ys replicate over 'model' when Hkv < TP degree
+    return out, (pctx.constrain(k, "kv_collect"), pctx.constrain(v, "kv_collect"))

@@ -1,0 +1,181 @@
+"""Encoder-decoder (Whisper-large-v3 backbone). Conv/mel frontend is a STUB:
+the encoder consumes precomputed frame embeddings (B, S_enc, d) supplied by
+``input_specs`` per the assignment.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.parallel import ctx as pctx
+from repro.models.transformer import REMAT_POLICIES, _scan_blocks, _stack_init
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention.attn_init(ks[0], cfg),
+        "mlp_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        "mlp": layers.mlp_init(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff, bias=cfg.bias),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    p = _enc_block_init(ks[0], cfg)
+    p["xattn_norm"] = layers.norm_init(cfg.norm, cfg.d_model)
+    p["xattn"] = attention.attn_init(ks[1], cfg)
+    return p
+
+
+def init_encdec(cfg, key):
+    ks = jax.random.split(key, 6)
+    return {
+        "emb": layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "pos_dec": layers.truncated_normal(ks[1], (65536, cfg.d_model), 0.01),
+        "enc_blocks": _stack_init(partial(_enc_block_init, cfg=cfg), ks[2], cfg.enc_layers),
+        "dec_blocks": _stack_init(partial(_dec_block_init, cfg=cfg), ks[3], cfg.dec_layers),
+        "enc_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        "dec_norm": layers.norm_init(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(cfg, params, frames, *, attn_fn=None, remat="full"):
+    """frames: (B, S_enc, d) precomputed frame embeddings (stub frontend).
+    The whisper encoder attends bidirectionally (non-causal)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+    nc_attn = attn_fn or (lambda q, k, v, **kw: attention.flash_ref(
+        q, k, v, causal=False))
+
+    def body(h, blk):
+        a = layers.apply_norm(cfg.norm, blk["attn_norm"], h)
+        a, _ = attention.attn_apply(blk["attn"], a, cfg, positions=positions,
+                                    attn_fn=nc_attn, use_rope=False)
+        h = h + a
+        m = layers.apply_norm(cfg.norm, blk["mlp_norm"], h)
+        h = h + layers.apply_mlp(cfg.mlp, blk["mlp"], m)
+        return pctx.constrain(h), None
+
+    x, _ = _scan_blocks(cfg, body, x, params["enc_blocks"], remat)
+    return layers.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _dec_block(blk, h, cfg, enc_kv, *, positions, kv=None, cache_index=None,
+               attn_fn=None):
+    a = layers.apply_norm(cfg.norm, blk["attn_norm"], h)
+    a, new_kv = attention.attn_apply(blk["attn"], a, cfg, positions=positions,
+                                     kv_cache=kv, cache_index=cache_index,
+                                     attn_fn=attn_fn, use_rope=False)
+    h = h + a
+    xa = layers.apply_norm(cfg.norm, blk["xattn_norm"], h)
+    xa, _ = attention.attn_apply(blk["xattn"], xa, cfg, positions=positions,
+                                 cross_kv=enc_kv, use_rope=False)
+    h = h + xa
+    m = layers.apply_norm(cfg.norm, blk["mlp_norm"], h)
+    h = h + layers.apply_mlp(cfg.mlp, blk["mlp"], m)
+    return h, new_kv
+
+
+def _cross_kv(cfg, blk, enc_h):
+    B, S_enc, _ = enc_h.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    k = layers.dense(blk["xattn"]["wk"], enc_h, dtype=dt).reshape(
+        B, S_enc, cfg.num_kv_heads, cfg.head_dim)
+    v = layers.dense(blk["xattn"]["wv"], enc_h, dtype=dt).reshape(
+        B, S_enc, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode_train(cfg, params, tokens, enc_h, *, attn_fn=None, remat="full"):
+    """Teacher-forced decoder pass. Returns hidden (B, S_dec, d)."""
+    x = layers.embed(params["emb"], tokens, dtype=jnp.dtype(cfg.compute_dtype))
+    S = tokens.shape[1]
+    x = x + params["pos_dec"][:S].astype(x.dtype)[None]
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, blk):
+        ekv = _cross_kv(cfg, blk, enc_h)
+        h, _ = _dec_block(blk, h, cfg, ekv, positions=positions, attn_fn=attn_fn)
+        return pctx.constrain(h), None
+
+    x, _ = _scan_blocks(cfg, body, x, params["dec_blocks"], remat)
+    return layers.apply_norm(cfg.norm, params["dec_norm"], x)
+
+
+def apply_encdec(cfg, params, frames, tokens, *, attn_fn=None, remat="full"):
+    enc_h = encode(cfg, params, frames, attn_fn=attn_fn, remat=remat)
+    hidden = decode_train(cfg, params, tokens, enc_h, attn_fn=attn_fn, remat=remat)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return hidden.astype(dt) @ params["emb"]["table"].T.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with self-cache + fixed cross kv
+# ---------------------------------------------------------------------------
+
+def init_dec_cache(cfg, batch, max_seq, s_enc, dtype=jnp.bfloat16):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    L = cfg.dec_layers
+    return {
+        "k": jnp.zeros((L, batch, max_seq, hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_seq, hkv, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, s_enc, hkv, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, s_enc, hkv, hd), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_encdec(cfg, params, frames, tokens, *, max_seq=None, remat="full"):
+    enc_h = encode(cfg, params, frames, remat=remat)
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    cache = init_dec_cache(cfg, B, max_seq, enc_h.shape[1],
+                           dtype=jnp.dtype(cfg.compute_dtype))
+    x = layers.embed(params["emb"], tokens, dtype=jnp.dtype(cfg.compute_dtype))
+    x = x + params["pos_dec"][:S].astype(x.dtype)[None]
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, blk):
+        ekv = _cross_kv(cfg, blk, enc_h)
+        h, kv = _dec_block(blk, h, cfg, ekv, positions=positions)
+        return pctx.constrain(h), (kv, ekv)
+
+    x, ((ks, vs), (cks, cvs)) = _scan_blocks(cfg, body, x, params["dec_blocks"], remat)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+    cache["idx"] = jnp.asarray(S, jnp.int32)
+    hidden = layers.apply_norm(cfg.norm, params["dec_norm"], x)
+    return hidden, cache
+
+
+def decode_encdec(cfg, params, cache, tokens):
+    """tokens: (B,1). Cross-attention reads the cached encoder projections."""
+    B = tokens.shape[0]
+    idx = cache["idx"]
+    x = layers.embed(params["emb"], tokens, dtype=jnp.dtype(cfg.compute_dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], idx, 1).astype(x.dtype)[None, 0]
+    positions = idx + jnp.zeros((1, 1), jnp.int32)
+
+    def body(h, inp):
+        blk, k, v, ck, cv = inp
+        h, (k2, v2) = _dec_block(blk, h, cfg, (ck, cv), positions=positions,
+                                 kv=(k, v), cache_index=idx)
+        return pctx.constrain(h, "residual_dec"), (k2, v2)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache, k=ks, v=vs, idx=idx + 1)
+    x = layers.apply_norm(cfg.norm, params["dec_norm"], x)
+    dt = jnp.dtype(cfg.compute_dtype)
+    logits = x.astype(dt) @ params["emb"]["table"].T.astype(dt)
+    return logits, new_cache

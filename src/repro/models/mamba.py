@@ -1,0 +1,150 @@
+"""Mamba2 (SSD) block: chunked state-space dual form.
+
+Per-head scalar decay a_t = exp(dt_t * A_head) makes the intra-chunk term a
+plain masked (Q x Q) matrix — MXU friendly. Inter-chunk state is carried by a
+lax.scan over chunks, all decay exponents are non-positive (stable).
+
+Decode keeps (conv_state, ssm_state) and performs the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    p = 64                               # mamba2 head dim
+    n_heads = d_inner // p
+    return d_inner, p, n_heads
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    N = cfg.ssm_state
+    d_inner, p, n_heads = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * N + n_heads     # z, x, B, C, dt
+    return {
+        "in_proj": layers.dense_init(ks[0], d, d_proj),
+        "conv_w": layers.truncated_normal(ks[1], (cfg.ssm_conv, d_inner + 2 * N), 0.5),
+        "conv_b": jnp.zeros((d_inner + 2 * N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01, jnp.float32))),
+        "norm": layers.norm_init("rmsnorm", d_inner),
+        "out_proj": layers.dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, p, n_heads = _dims(cfg)
+    N = cfg.ssm_state
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    return jax.nn.silu(y + b), new_state
+
+
+def mamba_apply(params, x, cfg, *, state=None):
+    """x: (B,S,d). state: None (train/prefill from zero) or decode state dict
+    {"conv": (B,K-1,C), "ssm": (B,H,p,N)}. Returns (y, new_state)."""
+    B, S, d = x.shape
+    N = cfg.ssm_state
+    d_inner, p, H = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    dt_c = jnp.dtype(cfg.compute_dtype)
+
+    zxbcdt = layers.dense(params["in_proj"], x, dtype=dt_c)
+    z, xc, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1).astype(jnp.float32)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"],
+        None if state is None else state["conv"])
+    xc, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                      # (H,) < 0
+    loga = dt * A                                                      # (B,S,H) <= 0
+    xh = xc.reshape(B, S, H, p)
+    ssm0 = (jnp.zeros((B, H, p, N), jnp.float32)
+            if state is None else state["ssm"].astype(jnp.float32))
+
+    if S == 1:  # decode fast path: h = a*h + dt*x (x) B ; y = h . C
+        a = jnp.exp(loga[:, 0])                                        # (B,H)
+        dx = (dt[:, 0, :, None] * xh[:, 0])                            # (B,H,p)
+        h = ssm0 * a[..., None, None] + dx[..., None] * Bc[:, 0, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0])
+        y = y + params["D"][None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, d_inner)
+        new_state = {"conv": conv_state, "ssm": h}
+    else:
+        nc = -(-S // Q)
+        pad = nc * Q - S
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bc_ = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cc_ = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+            loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+            dt_ = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            Bc_, Cc_, dt_ = Bc, Cc, dt
+        # chunk layout: leading scan axis
+        def cshape(t, feat):
+            return t.reshape(B, nc, Q, *feat).transpose(1, 0, 2, *range(3, 3 + len(feat)))
+        xh_c = cshape(xh, (H, p))
+        B_c = cshape(Bc_, (N,))
+        C_c = cshape(Cc_, (N,))
+        la_c = cshape(loga, (H,))
+        dt_chunks = cshape(dt_, (H,))
+
+        def chunk_body(h, inp):
+            xq, bq, cq, la, dtq = inp            # (B,Q,H,p) (B,Q,N) (B,Q,H)
+            lc = jnp.cumsum(la, axis=1)          # (B,Q,H) cumulative log decay
+            # intra-chunk: M[t,s] = exp(lc[t]-lc[s]) * (C_t.B_s) * dt_s, s<=t
+            rel = lc[:, :, None, :] - lc[:, None, :, :]          # (B,Q,Q,H)
+            tri = jnp.tril(jnp.ones((Q, Q), bool))
+            M = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+            cb = jnp.einsum("bqn,bsn->bqs", cq, bq)              # (B,Q,Q)
+            M = M * cb[..., None] * dtq[:, None, :, :]           # (B,Q,Q,H)
+            y_intra = jnp.einsum("bqsh,bshp->bqhp", M, xq)
+            # inter-chunk: y += C_t . (exp(lc[t]) h0)
+            y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, h, jnp.exp(lc))
+            # state update: h' = exp(lc[Q]) h0 + sum_s exp(lc[Q]-lc[s]) dt_s x_s B_s
+            declast = jnp.exp(lc[:, -1])                          # (B,H)
+            w_s = jnp.exp(lc[:, -1, None, :] - lc) * dtq          # (B,Q,H) <=? stable
+            h_new = h * declast[..., None, None] + jnp.einsum(
+                "bqh,bqhp,bqn->bhpn", w_s, xq, bq)
+            return h_new, y_intra + y_inter
+
+        hs, ys = jax.lax.scan(
+            chunk_body, ssm0, (xh_c, B_c, C_c, la_c, dt_chunks))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, p)[:, :S]
+        y = y + params["D"][None, None, :, None] * xh.reshape(B, nc * Q, H, p)[:, :S]
+        y = y.reshape(B, S, d_inner)
+        new_state = {"conv": conv_state, "ssm": hs}
+
+    y = layers.apply_norm("rmsnorm", params["norm"], y.astype(dt_c))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c)
+    out = layers.dense(params["out_proj"], y, dtype=dt_c)
+    return out, new_state
+
+
+def mamba_state_init(cfg, batch, dtype=jnp.float32):
+    d_inner, p, H = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state), jnp.float32),
+        "ssm": jnp.zeros((batch, H, p, cfg.ssm_state), dtype),
+    }

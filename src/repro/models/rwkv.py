@@ -1,0 +1,173 @@
+"""RWKV6 "Finch" block: data-dependent decay linear RNN (attention-free).
+
+Time-mix uses per-channel decay w_t[i] in (0,1); the chunked-parallel form
+keeps every exponent non-positive:
+
+  y_t = r~_t @ S_0 + sum_{s<t} (sum_i r_t[i] k_s[i] e^{lc[t-1,i]-lc[s,i]}) v_s
+        + (r_t . (u*k_t)) v_t
+  S'  = diag(e^{lc[Q]}) S_0 + sum_s diag(e^{lc[Q]-lc[s]}) k_s v_s^T
+
+where lc is the within-chunk cumulative log decay (lc <= 0, lc[t-1]-lc[s] <= 0
+for s <= t-1). The (Q,Q,p) contraction is exact — no log-space clamping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+N_MIX = 5          # w, k, v, r, g DDLerp mixes
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    p = cfg.rwkv_head_dim
+    H = d // p
+    ks = jax.random.split(key, 12)
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {
+        "tmix": {
+            "maa_x": z(d), "maa_wkvrg": z(N_MIX, d),
+            "maa_w1": layers.truncated_normal(ks[0], (d, N_MIX * LORA_MIX), 0.02),
+            "maa_w2": layers.truncated_normal(ks[1], (N_MIX, LORA_MIX, d), 0.02),
+            "decay": jnp.full((d,), -4.0, jnp.float32),
+            "decay_w1": layers.truncated_normal(ks[2], (d, LORA_DECAY), 0.02),
+            "decay_w2": layers.truncated_normal(ks[3], (LORA_DECAY, d), 0.02),
+            "u": layers.truncated_normal(ks[4], (H, p), 0.3),
+            "wr": layers.dense_init(ks[5], d, d),
+            "wk": layers.dense_init(ks[6], d, d),
+            "wv": layers.dense_init(ks[7], d, d),
+            "wg": layers.dense_init(ks[8], d, d),
+            "wo": layers.dense_init(ks[9], d, d),
+            "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                     "bias": jnp.zeros((d,), jnp.float32)},
+        },
+        "cmix": {
+            "maa_k": z(d), "maa_r": z(d),
+            "wk": layers.dense_init(ks[10], d, cfg.d_ff),
+            "wv": layers.dense_init(ks[11], cfg.d_ff, d),
+            "wr": layers.dense_init(jax.random.fold_in(key, 99), d, d),
+        },
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,d); x_prev: (B,d) last token of the previous call."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _group_norm(p, x, H):
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y.reshape(B, S, d) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def time_mix(p, x, cfg, *, S0, x_prev, chunk: int = 64):
+    """x: (B,S,d). S0: (B,H,p,p) state (k-dim, v-dim). Returns y, S', x_last."""
+    B, S, d = x.shape
+    ph = cfg.rwkv_head_dim
+    H = d // ph
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    sx = _token_shift(xf, x_prev)
+    dx = sx - xf
+    xxx = xf + dx * p["maa_x"]
+    mix = jnp.tanh(xxx @ p["maa_w1"]).reshape(B, S, N_MIX, LORA_MIX)
+    mix = jnp.einsum("bsnl,nld->bsnd", mix, p["maa_w2"])          # (B,S,5,d)
+    xw, xk, xv, xr, xg = [xf + dx * (p["maa_wkvrg"][i] + mix[:, :, i])
+                          for i in range(N_MIX)]
+
+    logw = -jnp.exp(p["decay"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"])
+    logw = jnp.clip(logw, -60.0, -1e-5)                            # (B,S,d) < 0
+    r = (xr @ p["wr"]["w"].astype(f32)).reshape(B, S, H, ph)
+    k = (xk @ p["wk"]["w"].astype(f32)).reshape(B, S, H, ph)
+    v = (xv @ p["wv"]["w"].astype(f32)).reshape(B, S, H, ph)
+    g = jax.nn.silu(xg @ p["wg"]["w"].astype(f32))
+    lw = logw.reshape(B, S, H, ph)
+    u = p["u"]
+
+    if S == 1:  # decode: y = r.(S0 + u k v^T); S' = diag(w) S0 + k v^T
+        r1, k1, v1, lw1 = r[:, 0], k[:, 0], v[:, 0], lw[:, 0]
+        kv = k1[..., :, None] * v1[..., None, :]                   # (B,H,p,p)
+        y = jnp.einsum("bhi,bhij->bhj", r1, S0 + u[None, :, :, None] * kv)
+        S_new = S0 * jnp.exp(lw1)[..., None] + kv
+        y = y.reshape(B, 1, d)
+    else:
+        Q = min(chunk, S)
+        nc = -(-S // Q)
+        pad = nc * Q - S
+        if pad:
+            r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+            lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))   # pad logw=0: w=1
+        resh = lambda t: t.reshape(B, nc, Q, H, ph).transpose(1, 0, 3, 2, 4)
+        rc, kc, vc, lc_ = map(resh, (r, k, v, lw))                 # (nc,B,H,Q,p)
+
+        tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)               # strict lower
+
+        def body(S0_, inp):
+            rq, kq, vq, la = inp                                   # (B,H,Q,p)
+            lc = jnp.cumsum(la, axis=2)                            # (B,H,Q,p)
+            lprev = jnp.concatenate(
+                [jnp.zeros_like(lc[:, :, :1]), lc[:, :, :-1]], axis=2)  # lc[t-1]
+            # A[t,s] = sum_i r[t,i] k[s,i] exp(lprev[t,i]-lc[s,i]), s < t
+            rel = lprev[:, :, :, None, :] - lc[:, :, None, :, :]   # (B,H,Q,Q,p)
+            E = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+            A = jnp.einsum("bhti,bhtsi,bhsi->bhts", rq, E, kq)
+            diag = jnp.einsum("bhti,hi,bhti->bht", rq, u, kq)
+            y = jnp.einsum("bhts,bhsj->bhtj", A, vq) + diag[..., None] * vq
+            y = y + jnp.einsum("bhti,bhij->bhtj", rq * jnp.exp(lprev), S0_)
+            # state: S' = diag(e^{lc[Q]}) S0 + sum_s diag(e^{lc[Q]-lc[s]}) k_s v_s
+            k_hat = kq * jnp.exp(lc[:, :, -1:, :] - lc)
+            S_new_ = S0_ * jnp.exp(lc[:, :, -1])[..., None] + jnp.einsum(
+                "bhsi,bhsj->bhij", k_hat, vq)
+            return S_new_, y
+
+        S_new, ys = jax.lax.scan(body, S0.astype(f32), (rc, kc, vc, lc_))
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nc * Q, d)[:, :S]
+
+    y = _group_norm(p["ln_x"], y, H)
+    y = (y.astype(f32) * g) @ p["wo"]["w"].astype(f32)
+    return y.astype(x.dtype), S_new, xf[:, -1]
+
+
+def channel_mix(p, x, *, x_prev):
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    sx = _token_shift(xf, x_prev)
+    dx = sx - xf
+    xk = xf + dx * p["maa_k"]
+    xr = xf + dx * p["maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]["w"].astype(f32)))
+    kv = k @ p["wv"]["w"].astype(f32)
+    y = jax.nn.sigmoid(xr @ p["wr"]["w"].astype(f32)) * kv
+    return y.astype(x.dtype), xf[:, -1]
+
+
+def rwkv_state_init(cfg, batch):
+    d = cfg.d_model
+    p = cfg.rwkv_head_dim
+    H = d // p
+    return {
+        "S": jnp.zeros((batch, H, p, p), jnp.float32),
+        "x_att": jnp.zeros((batch, d), jnp.float32),
+        "x_cmix": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv_block(params, x, cfg, norms, *, state):
+    """One RWKV layer: ln1 -> time_mix -> ln2 -> channel_mix (pre-norm)."""
+    h, S_new, x_att = time_mix(
+        params["tmix"], layers.apply_norm("layernorm", norms["ln1"], x), cfg,
+        S0=state["S"], x_prev=state["x_att"])
+    x = x + h
+    h, x_cm = channel_mix(
+        params["cmix"], layers.apply_norm("layernorm", norms["ln2"], x),
+        x_prev=state["x_cmix"])
+    x = x + h
+    return x, {"S": S_new, "x_att": x_att, "x_cmix": x_cm}

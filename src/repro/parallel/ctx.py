@@ -1,0 +1,50 @@
+"""Activation-sharding context: model code calls ``constrain(x, kind)`` at
+block boundaries; inside an ``activation_sharding(...)`` scope this becomes
+``with_sharding_constraint`` (critical: keeps scan-saved residuals sharded —
+without it XLA can replicate the remat carries and blow per-device HBM by
+the DP degree), outside it is a no-op (single-device tests).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ActivationSpecs:
+    specs: Dict[str, P] = field(default_factory=dict)
+
+    def get(self, kind: str) -> Optional[P]:
+        return self.specs.get(kind)
+
+
+def current() -> Optional[ActivationSpecs]:
+    return getattr(_STATE, "specs", None)
+
+
+@contextmanager
+def activation_sharding(**kinds):
+    """activation_sharding(residual=P('data','model',None), ...)"""
+    prev = current()
+    _STATE.specs = ActivationSpecs(dict(kinds))
+    try:
+        yield
+    finally:
+        _STATE.specs = prev
+
+
+def constrain(x, kind: str = "residual"):
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

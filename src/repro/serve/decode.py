@@ -1,0 +1,45 @@
+"""Serve steps: prefill and single-token decode, jit-ready.
+
+``make_serve_step`` returns the decode_step lowered in the dry-run for the
+``decode_32k`` / ``long_500k`` cells: one new token per sequence against a
+resident KV cache (or SSM state), greedy-sampled.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+def make_prefill_step(cfg, *, max_seq: int, remat: str = "full",
+                      attn_chunk: int = 512, cast_params: str = "none",
+                      attn_pv_bf16: bool = False):
+    def prefill_step(params, batch):
+        if cast_params != "none":
+            cdt = jnp.dtype(cast_params)
+            params = jax.tree.map(
+                lambda p: p.astype(cdt)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        attn_fn = None
+        if attn_chunk != 512 or attn_pv_bf16:
+            from repro.models.attention import flash_ref
+            attn_fn = partial(flash_ref, chunk=attn_chunk,
+                              pv_bf16=attn_pv_bf16)
+        hidden, cache = api.prefill(cfg, params, batch, max_seq=max_seq,
+                                    remat=remat, attn_fn=attn_fn)
+        logits = api.unembed(cfg, params, hidden[:, -1:])
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, tokens):
+        """tokens: (B, 1) -> (next_token (B,1), new_cache)."""
+        logits, cache = api.decode(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step

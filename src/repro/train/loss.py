@@ -1,0 +1,47 @@
+"""Loss: chunked-vocab cross entropy.
+
+The (T, V) logits matrix is never materialized for the whole batch — the
+final projection + log-sum-exp run per token chunk under a lax.scan whose
+body is rematerialized, bounding peak memory at (chunk, V) while keeping the
+matmul MXU-shaped. This matters for 100k+ vocabularies (qwen, command-r).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_cross_entropy(hidden, w_unembed, labels, *, chunk: int = 2048,
+                          ignore_index: int = -1):
+    """hidden: (B,S,d); w_unembed: (d,V); labels: (B,S) int32.
+
+    Returns (mean_nll over non-ignored, total_weight).
+    """
+    B, S, d = hidden.shape
+    T = B * S
+    h = hidden.reshape(T, d)
+    y = labels.reshape(T)
+    chunk = min(chunk, T)
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, pad),), constant_values=ignore_index)
+    hc = h.reshape(n, chunk, d)
+    yc = y.reshape(n, chunk)
+
+    def body(acc, inp):
+        hx, yx = inp
+        logits = (hx.astype(jnp.bfloat16) @ w_unembed.astype(jnp.bfloat16)
+                  ).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yx, 0)[:, None], axis=-1)[:, 0]
+        valid = (yx != jnp.asarray(ignore_index)).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        loss_sum, w_sum = acc
+        return (loss_sum + jnp.sum(nll), w_sum + jnp.sum(valid)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (loss_sum, w_sum), _ = jax.lax.scan(body, (0.0, 0.0), (hc, yc))
+    return loss_sum / jnp.maximum(w_sum, 1.0), w_sum

@@ -1,0 +1,106 @@
+"""Optimizer substrate: AdamW + global-norm clipping + LR schedules
+(cosine and MiniCPM's WSD), pure-pytree implementation.
+
+Optimizer state shards exactly like the parameters (FSDP): m/v inherit the
+param PartitionSpecs, so 100B+ models fit (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | wsd | const
+    wsd_stable_frac: float = 0.8      # WSD: fraction of steps at peak LR
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def schedule_lr(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return cfg.lr * warm * cos
+    if cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM): flat at peak, then 1-sqrt decay
+        stable_end = cfg.warmup_steps + cfg.wsd_stable_frac * (
+            cfg.total_steps - cfg.warmup_steps)
+        t = jnp.clip((step - stable_end) / jnp.maximum(
+            cfg.total_steps - stable_end, 1), 0.0, 1.0)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * (1.0 - jnp.sqrt(t))
+        return cfg.lr * warm * jnp.where(step < stable_end, 1.0, decay)
+    raise ValueError(cfg.schedule)
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/bias/1-d params."""
+    last = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return last not in ("b", "scale", "bias")
+
+
+def apply_updates(cfg: OptConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path) and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree_util.tree_map_with_path(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v, step), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,130 @@
+"""SimFA-python analytical model: Eq. (1)-(12) invariants + hypothesis
+property tests (paper §3, §6)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.llama3 import AttnWorkload, workload
+from repro.core import analytical as A
+from repro.core.genz_baseline import genz_dram_traffic
+from repro.core.machine import H800, h800_variant
+
+
+def _w(L=4096, S=None, B=1, H_kv=8, G=4, D=128, causal=False):
+    return AttnWorkload(name="t", B=B, L=L, S=S or L, H_kv=H_kv, G=G, D=D,
+                        causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# closed forms
+# ---------------------------------------------------------------------------
+
+def test_eq1_flops():
+    w = _w(L=1024, S=2048, B=2, H_kv=8, G=4, D=128)
+    assert A.total_flops(w) == 4 * 2 * 32 * 1024 * 2048 * 128
+
+
+def test_eq2_l2_traffic_exact():
+    w = _w(L=512, S=512, H_kv=2, G=2, D=64)
+    t_m = 64
+    expect = 2 * 1 * (2 * 2) * 64 * (2 * 512 + math.ceil(512 / 64) * 2 * 512)
+    assert A.l2_traffic(w, t_m) == expect
+
+
+def test_eq3_dram_ideal():
+    w = _w(L=1024, S=1024, H_kv=8, G=4, D=128)
+    # Q+O (H_kv*G heads) + K+V (H_kv heads), once each
+    expect = 2 * 1 * 128 * (2 * 32 * 1024 + 2 * 8 * 1024)
+    assert A.dram_ideal(w) == expect
+
+
+def test_eq4_h800_crossover_between_32k_and_64k():
+    """With 25MB effective L2, the ideal regime ends at S* = 25MB/(2*P*D)
+    = 51200 — between 48K and 64K, matching paper Fig. 9's transition."""
+    for s, ideal in ((16384, True), (32768, True), (49152, True),
+                     (65536, False), (131072, False)):
+        w = workload("405B", s, batch=1)
+        rep = A.analyze(w, H800)
+        assert rep.ideal_regime == ideal, s
+
+
+def test_eq5_wave_count():
+    w = _w(L=65536, G=16)
+    # G * ceil(L/T_M) / (N_SM * O_limit)
+    expect = math.ceil(16 * math.ceil(65536 / 64) / (132 * 2))
+    assert A.waves_per_group(w, 64, 132, 2) == expect
+
+
+def test_eq10_traffic_ratio_approaches_nsm_olimit():
+    w = _w(L=262144, G=16)
+    rep = A.analyze(w, H800)
+    assert not rep.ideal_regime
+    ratio = rep.traffic_ratio
+    assert ratio == pytest.approx(132 * 2, rel=0.35)
+
+
+def test_eq12_intensity_approx():
+    w = _w(L=65536)
+    rep = A.analyze(w, H800, t_m=64)
+    assert rep.intensity_approx == 2 * 64 / 2
+    assert rep.intensity_l2 == pytest.approx(rep.intensity_approx, rel=0.1)
+
+
+def test_genz_underestimates_long_sequences():
+    w = workload("405B", 131072, batch=1)
+    rep = A.analyze(w, H800)
+    assert genz_dram_traffic(w) < 0.5 * rep.dram_bytes
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(L=st.integers(256, 1 << 18), G=st.integers(1, 16),
+       t_m=st.sampled_from([32, 64, 128]), n_sm=st.integers(16, 264),
+       o=st.integers(1, 4))
+def test_wave_monotonicity(L, G, t_m, n_sm, o):
+    """Waves grow with work (L, G), shrink with concurrency (SMs, occ)."""
+    w = _w(L=L, G=G)
+    base = A.waves_per_group(w, t_m, n_sm, o)
+    assert base >= 1
+    assert A.waves_per_group(_w(L=2 * L, G=G), t_m, n_sm, o) >= base
+    assert A.waves_per_group(_w(L=L, G=min(16, 2 * G)), t_m, n_sm, o) >= base
+    assert A.waves_per_group(w, t_m, 2 * n_sm, o) <= base
+    assert A.waves_per_group(w, 2 * t_m, n_sm, o) <= base
+
+
+@settings(max_examples=60, deadline=None)
+@given(L=st.integers(256, 1 << 17), H_kv=st.sampled_from([1, 2, 8]),
+       G=st.integers(1, 8), D=st.sampled_from([64, 128]))
+def test_traffic_ordering_invariant(L, H_kv, G, D):
+    """L2 demand >= realistic DRAM >= ideal DRAM (caches only filter)."""
+    w = _w(L=L, H_kv=H_kv, G=G, D=D)
+    l2 = A.l2_traffic(w, 64)
+    ideal = A.dram_ideal(w)
+    real = A.dram_real(w, 64, H800.num_sms, H800.occupancy_limit)
+    assert real >= ideal * 0.999
+    assert l2 >= real * 0.999
+
+
+@settings(max_examples=40, deadline=None)
+@given(s_log=st.integers(10, 18))
+def test_regime_split_continuous_at_boundary(s_log):
+    """analyze() never reports MORE traffic in the ideal regime."""
+    w = _w(L=1 << s_log)
+    rep = A.analyze(w, H800)
+    assert rep.dram_bytes >= A.dram_ideal(w) * 0.999
+    assert rep.latency > 0
+    assert rep.bottleneck in ("compute", "l2", "dram")
+
+
+@settings(max_examples=30, deadline=None)
+@given(l2_mb=st.integers(10, 400))
+def test_bigger_l2_never_increases_traffic(l2_mb):
+    w = workload("405B", 65536, batch=1)
+    small = A.analyze(w, H800)
+    big = A.analyze(w, h800_variant(l2_bytes=l2_mb * 1024 * 1024))
+    if l2_mb * 1024 * 1024 >= H800.l2_bytes:
+        assert big.dram_bytes <= small.dram_bytes * 1.001

@@ -1,0 +1,30 @@
+"""Multi-pod dry-run smoke: one (arch x shape) cell must lower+compile on
+the production meshes in a fresh subprocess (XLA device-count flags must be
+set before jax initializes, so this cannot run in-process)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.parametrize("arch,shape", [("olmo-1b", "train_4k")])
+def test_dryrun_cell_compiles_multi_pod(arch, shape, tmp_path):
+    out = tmp_path / "dry.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "multi", "--out", str(out), "--force"],
+        cwd=ROOT, timeout=900, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rec = json.loads(out.read_text())[f"{arch}|{shape}|multi_pod_2x16x16"]
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 512
+    assert rec["flops_per_device"] > 0
+    assert rec["collective_bytes_per_device"] > 0
+    # fits a 16 GiB v5e chip
+    assert rec["mem"]["peak_bytes"] < 16 * 1024**3

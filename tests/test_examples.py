@@ -1,0 +1,52 @@
+"""Examples must actually run (reduced knobs) — including the preemption /
+restart cycle of the e2e trainer and the benchmark runner plumbing."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+ENV_PY = [sys.executable]
+
+
+def _run(args, timeout=600):
+    return subprocess.run(
+        ENV_PY + args, cwd=ROOT, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True)
+
+
+def test_quickstart_runs():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "quickstart OK" in r.stdout
+
+
+def test_train_e2e_preempt_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    base = ["examples/train_e2e.py", "--arch", "qwen2.5-3b", "--steps", "24",
+            "--batch", "2", "--seq", "32", "--ckpt-every", "8",
+            "--ckpt-dir", ck, "--log-every", "8"]
+    r1 = _run(base + ["--preempt-at", "10"])
+    assert r1.returncode == 17, r1.stderr[-2000:]
+    assert "simulated preemption" in r1.stdout
+    r2 = _run(base)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from checkpoint step 8" in r2.stdout
+    assert "done: 24 steps" in r2.stdout
+
+
+def test_serve_e2e_runs():
+    r = _run(["examples/serve_e2e.py", "--requests", "5", "--slots", "2",
+              "--max-new", "3", "--prompt-len", "8", "--max-seq", "32"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "serve_e2e OK" in r.stdout
+
+
+def test_simulate_dse_runs():
+    r = _run(["examples/simulate_dse.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "DRAM traffic regimes" in r.stdout
+    assert "flash block sizes" in r.stdout

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (reduced configs) + decode-cache equivalence
++ family-specific invariants. Runs on CPU with 1 device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.models import api, attention, mamba, rwkv
+from repro.train.loss import chunked_cross_entropy
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = list(registry.ARCHS)
+
+
+def _batch(cfg, B=2, S=24):
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["embeds"] = 0.1 * jax.random.normal(KEY, (B, cfg.frontend_len, cfg.d_model))
+    if cfg.family == "encdec":
+        b["frames"] = 0.1 * jax.random.normal(KEY, (B, cfg.frontend_len, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one SGD step on CPU; shapes + no NaNs."""
+    cfg = registry.get(arch).reduced()
+    params = api.init(cfg, KEY)
+    batch = _batch(cfg)
+    B, S = batch["tokens"].shape
+
+    def loss_fn(p):
+        hidden, aux = api.forward_hidden(cfg, p, batch, remat="none")
+        assert hidden.shape[0] == B and hidden.shape[2] == cfg.d_model
+        loss, _ = chunked_cross_entropy(hidden[:, -S:],
+                                        api.unembed_table(cfg, p),
+                                        batch["labels"], chunk=16)
+        return loss + 0.01 * jnp.asarray(aux, jnp.float32)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: non-finite grads"
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    loss2, _ = jax.value_and_grad(loss_fn)(new_params)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_full_forward(arch):
+    import dataclasses
+    cfg = registry.get(arch).reduced()
+    if cfg.family == "moe":
+        # ample capacity: token dropping differs between batched prefill and
+        # one-token decode by design; equivalence holds when nothing drops
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = api.init(cfg, KEY)
+    B, S = 2, 13
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    batch = _batch(cfg, B, S + 1)
+    batch["tokens"] = toks
+    hidden, _ = api.forward_hidden(cfg, params, batch, remat="none")
+    logits_full = api.unembed(cfg, params, hidden[:, -1:])
+    pre = dict(batch, tokens=toks[:, :S])
+    _, cache = api.prefill(cfg, params, pre, max_seq=S + cfg.frontend_len + 8)
+    logits_dec, cache2 = api.decode(cfg, params, cache, toks[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_cell_assignment_covers_40():
+    cells = list(registry.cells())
+    assert len(cells) == 40
+    skipped = [(c.name, s.name) for c, s, ok, _ in cells if not ok]
+    # only pure full-attention archs skip, and only long_500k
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {"zamba2-7b", "rwkv6-7b"}.isdisjoint({c for c, _ in skipped})
+
+
+def test_mamba_chunked_matches_recurrent():
+    """Chunked SSD == step-by-step recurrence (same state, same output)."""
+    cfg = registry.get("zamba2-7b").reduced()
+    p = mamba.mamba_init(KEY, cfg)
+    B, S = 2, 12
+    x = 0.5 * jax.random.normal(KEY, (B, S, cfg.d_model))
+    y_chunk, st_chunk = mamba.mamba_apply(p, x, cfg)
+    st = mamba.mamba_state_init(cfg, B)
+    ys = []
+    for t in range(S):
+        y_t, st = mamba.mamba_apply(p, x[:, t:t + 1], cfg, state=st)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq, np.float32),
+                               np.asarray(y_chunk, np.float32), atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(st["ssm"]), np.asarray(st_chunk["ssm"]),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_rwkv_chunked_matches_recurrent():
+    cfg = registry.get("rwkv6-7b").reduced()
+    p = rwkv.rwkv_init(KEY, cfg)
+    B, S, d = 2, 9, cfg.d_model
+    x = 0.5 * jax.random.normal(KEY, (B, S, d))
+    S0 = jnp.zeros((B, d // cfg.rwkv_head_dim, cfg.rwkv_head_dim, cfg.rwkv_head_dim))
+    x_prev = jnp.zeros((B, d))
+    y_chunk, S_chunk, _ = rwkv.time_mix(p["tmix"], x, cfg, S0=S0, x_prev=x_prev, chunk=4)
+    Sr, xp = S0, x_prev
+    ys = []
+    for t in range(S):
+        y_t, Sr, xp = rwkv.time_mix(p["tmix"], x[:, t:t + 1], cfg, S0=Sr, x_prev=xp)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq, np.float32),
+                               np.asarray(y_chunk, np.float32), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(Sr), np.asarray(S_chunk), atol=1e-3, rtol=1e-3)
+
+
+def test_flash_ref_matches_naive():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 8, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    o1 = attention.flash_ref(q, k, v, causal=True, chunk=16)
+    o2 = attention.attention_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5, rtol=1e-5)
+
+
+def test_moe_einsum_vs_scatter_equivalence():
+    """With ample capacity both dispatch impls route identically."""
+    from repro.models import moe as moe_mod
+    import dataclasses
+    cfg = dataclasses.replace(registry.get("dbrx-132b").reduced(),
+                              capacity_factor=4.0)
+    p = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    y1, _ = moe_mod.moe_apply(p, x, cfg, impl="einsum", group_size=32)
+    y2, _ = moe_mod.moe_apply(p, x, cfg, impl="scatter")
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=2e-2, rtol=2e-2)

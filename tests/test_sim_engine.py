@@ -1,0 +1,237 @@
+"""Sim-FA engine unit tests: barrier semantics, async engines, memory
+hierarchy mechanisms (paper §4, Table 3/5)."""
+import pytest
+
+from repro.core import isa
+from repro.core.engine import CTATrace, Engine
+from repro.core.isa import Instr, TensorMap
+from repro.core.machine import H800, h800_variant
+from repro.core.memory import EventQueue, build_memory
+
+
+def _run(ctas, tmaps=None, cfg=H800, n_sms=1, **kw):
+    eng = Engine(cfg, n_sms=n_sms, mem_scale=1.0, **kw)
+    for tm in (tmaps or {}).values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    return eng, st
+
+
+def _tmap(map_id=0, rows=4, cols=64, esz=2):
+    # rows x cols tile in a big contiguous tensor
+    return TensorMap(map_id, 0, (1, 1 << 16, cols),
+                     (1 << 34, cols * esz, esz), (1, rows, cols), esz)
+
+
+# ---------------------------------------------------------------------------
+# barriers / async semantics
+# ---------------------------------------------------------------------------
+
+def test_mb_wait_blocks_until_tma_completes():
+    tm = _tmap()
+    prod = [Instr(isa.TMA_TENSOR, map_id=0, sid=0, origin=(0, 0, 0))]
+    cons = [Instr(isa.MB_WAIT, sid=0), Instr(isa.BUBBLES, cycles=10)]
+    eng, st = _run([CTATrace(wgs=[prod, cons], n_consumers=1)], {0: tm})
+    assert not eng.deadlocked
+    # must include TMA setup + L2 round trip, not just the bubble
+    assert st["cycles"] > H800.tma_launch_latency + H800.l2_near_latency
+
+
+def test_mb_wait_without_signal_deadlocks():
+    cons = [Instr(isa.MB_WAIT, sid=7)]
+    eng, st = _run([CTATrace(wgs=[cons], n_consumers=1)])
+    assert eng.deadlocked
+
+
+def test_wgmma_wait_group_semantics():
+    """WGMMA_WAIT gid N blocks until <= N committed groups outstanding."""
+    tr = []
+    for gid in (0, 1):
+        for _ in range(4):
+            tr.append(Instr(isa.WGMMA, gid=gid, m=64, n=128, k=16))
+        tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+    tr.append(Instr(isa.WGMMA_WAIT, gid=1, n=0))   # drain all
+    eng, st = _run([CTATrace(wgs=[tr], n_consumers=1)])
+    assert not eng.deadlocked
+    # 8 MMAs of N=128 at ~N/2 cycles on one pipeline ≈ 512+
+    assert st["tc_busy_cycles"] == 8 * 64
+
+
+def test_pingpong_barrier_orders_consumers():
+    """BAR_WAIT k blocks until >= k arrivals (asymmetric named barrier)."""
+    c1 = [Instr(isa.BAR_ARRIVE, bid=0), Instr(isa.BUBBLES, cycles=50)]
+    c2 = [Instr(isa.BAR_WAIT, bid=0, n=1), Instr(isa.BUBBLES, cycles=50)]
+    eng, st = _run([CTATrace(wgs=[c1, c2], n_consumers=2)])
+    assert not eng.deadlocked
+
+
+def test_producer_consumer_ring_buffer_backpressure():
+    """ACQUIRE_STAGE blocks the producer until consumers release the slot."""
+    tm = _tmap()
+    stages = 2
+    n_tiles = 5
+    prod, cons = [], []
+    for j in range(n_tiles):
+        sid = j % stages
+        prod.append(Instr(isa.ACQUIRE_STAGE, sid=sid))
+        prod.append(Instr(isa.TMA_TENSOR, map_id=0, sid=sid, origin=(0, j * 4, 0)))
+    for j in range(n_tiles):
+        sid = j % stages
+        cons.append(Instr(isa.MB_WAIT, sid=sid))
+        cons.append(Instr(isa.BUBBLES, cycles=200))
+        cons.append(Instr(isa.RELEASE_STAGE, sid=sid))
+    eng, st = _run([CTATrace(wgs=[prod, cons], n_consumers=1)], {0: tm})
+    assert not eng.deadlocked
+    # consumer serializes 5 tiles x 200-cycle bubbles minimum
+    assert st["cycles"] >= 1000
+
+
+def test_tma_store_group_wait():
+    tm = _tmap()
+    tr = [Instr(isa.TMA_STORE, map_id=0, gid=3, origin=(0, 0, 0)),
+          Instr(isa.TMA_COMMIT, gid=3),
+          Instr(isa.TMA_WAIT, gid=3, n=0)]
+    eng, st = _run([CTATrace(wgs=[tr], n_consumers=1)], {0: tm})
+    assert not eng.deadlocked
+
+
+# ---------------------------------------------------------------------------
+# TMA engine mechanics
+# ---------------------------------------------------------------------------
+
+def test_tma_dedup_reduces_requests():
+    """Per-element address generation floods the memory system (Table 5)."""
+    tm = _tmap(rows=8, cols=64)          # 64 elems fp16 = 1 line per row
+    lines_dedup = tm.tile_lines((0, 0, 0), 128, dedup=True)
+    lines_elem = tm.tile_lines((0, 0, 0), 128, dedup=False)
+    assert len(lines_dedup) == 8
+    assert len(lines_elem) == 8 * 64     # one request per element
+    assert set(lines_elem) == set(lines_dedup)
+
+
+def test_bulk_skips_descriptor_setup():
+    tm = _tmap()
+    def total(bulk):
+        tr = [Instr(isa.TMA_TENSOR, map_id=0, sid=0, origin=(0, 0, 0),
+                    bulk=bulk),
+              Instr(isa.MB_WAIT, sid=0)]
+        _, st = _run([CTATrace(wgs=[tr], n_consumers=1)], {0: tm})
+        return st["cycles"]
+    assert total(False) - total(True) == H800.tma_tmap_setup_latency
+
+
+def test_inflight_line_cap_throttles():
+    cfg_small = h800_variant(tma_max_inflight_lines=2)
+    tm = _tmap(rows=64, cols=64)
+    tr = [Instr(isa.TMA_TENSOR, map_id=0, sid=0, origin=(0, 0, 0)),
+          Instr(isa.MB_WAIT, sid=0)]
+    _, st_small = _run([CTATrace(wgs=[tr], n_consumers=1)], {0: tm},
+                       cfg=cfg_small)
+    _, st_big = _run([CTATrace(wgs=[tr], n_consumers=1)], {0: tm})
+    assert st_small["cycles"] > st_big["cycles"]
+
+
+# ---------------------------------------------------------------------------
+# memory hierarchy
+# ---------------------------------------------------------------------------
+
+def test_xor_hash_spreads_strided_lines():
+    """2048-byte strides concentrate on slices under low-bit hash (§5.4)."""
+    from collections import Counter
+    cfg = H800
+    l2_x = build_memory(cfg, EventQueue())[1]
+    l2_n = build_memory(h800_variant(xor_hash=False), EventQueue())[1]
+    addrs = [i * 2048 for i in range(4096)]
+    cx = Counter(l2_x.slice_of(a) for a in addrs)
+    cn = Counter(l2_n.slice_of(a) for a in addrs)
+    # naive hash: stride 16 lines -> gcd(16,80)=16 -> only 5 slices hit
+    assert len(cn) <= 8
+    assert len(cx) >= 40
+    assert max(cx.values()) < 4 * (len(addrs) / 80)
+
+
+def test_lrc_merges_sm_pair_duplicates():
+    cfg = H800
+    evq = EventQueue()
+    lrc, l2, dram = build_memory(cfg, evq)
+    done = []
+    # same line from SMs 0 and 1 (one pair) while in flight -> merged
+    lrc.request(0, 4096, 0, lambda: done.append(0))
+    lrc.request(0, 4096, 1, lambda: done.append(1))
+    # different pair -> separate L2 request
+    lrc.request(0, 4096, 2, lambda: done.append(2))
+    while evq._h:
+        evq.pop_ready(evq.next_cycle())
+    assert sorted(done) == [0, 1, 2]
+    assert lrc.merged == 1
+    assert l2.requests == 2
+
+
+def test_mshr_full_stalls_and_recovers():
+    cfg = h800_variant(l2_mshr_per_slice=2, lrc_enabled=False)
+    evq = EventQueue()
+    lrc, l2, dram = build_memory(cfg, evq)
+    done = []
+    # 8 distinct misses into one slice: 2 MSHRs -> 6 stall, all complete
+    sl = l2.slices[0]
+    for i in range(8):
+        sl.access(0, i * 997, False, lambda i=i: done.append(i))
+    while evq._h:
+        evq.pop_ready(evq.next_cycle())
+    assert len(done) == 8
+    assert sl.misses == 8
+
+
+def test_remote_copy_mirror_serves_near_reads():
+    cfg = H800
+    evq = EventQueue()
+    lrc, l2, dram = build_memory(cfg, evq)
+    # find a line whose home slice is far from SM 0 (partition 1)
+    line = next(a * 128 for a in range(1000)
+                if l2.slice_of(a * 128) >= l2.n // 2)
+    l2.slices[l2.slice_of(line)]._insert(line)
+    lat = []
+    def probe(t0):
+        l2.access(t0, line, 0, lambda: lat.append(evq.now - t0))
+        while evq._h:
+            evq.pop_ready(evq.next_cycle())
+    for _ in range(12):                   # repeated far reads
+        probe(evq.now)
+    assert lat[0] == cfg.l2_far_latency
+    assert lat[-1] == cfg.l2_near_latency  # mirror took over
+
+
+def test_dram_bandwidth_bound():
+    """Aggregate DRAM service rate matches the configured bandwidth."""
+    cfg = H800
+    evq = EventQueue()
+    _, _, dram = build_memory(cfg, evq)
+    n = 80000
+    done = [0]
+    for i in range(n):
+        dram.access(0, i * 128, lambda: done.__setitem__(0, done[0] + 1))
+    t_end = 0
+    while evq._h:
+        t_end = evq.next_cycle()
+        evq.pop_ready(t_end)
+    assert done[0] == n
+    # subtract the fixed-latency tail of the last line
+    busy = t_end - cfg.dram_latency
+    achieved = n * 128 / (busy / (cfg.freq_ghz * 1e9)) / 1e9
+    assert achieved == pytest.approx(cfg.dram_bw_gbps, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# occupancy / scheduling
+# ---------------------------------------------------------------------------
+
+def test_occupancy_limit_serializes_waves():
+    tm = _tmap()
+    def cta():
+        tr = [Instr(isa.BUBBLES, cycles=1000)]
+        return CTATrace(wgs=[tr], n_consumers=1)
+    # 4 CTAs, occupancy 2, 1 SM -> 2 waves of 1000 cycles
+    eng, st = _run([cta() for _ in range(4)])
+    assert 2000 <= st["cycles"] < 2200
+    assert eng.retired == 4
