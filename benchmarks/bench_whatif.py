@@ -1,0 +1,86 @@
+"""What-if replay validation + speed benchmark (acceptance criteria).
+
+Checks, on a full-fidelity FA3 launch:
+  1. DAG replay with every knob at x1.0 matches the cycle engine's makespan
+     to within 1%;
+  2. a 3-point TMA-bandwidth what-if sweep via replay completes >=10x faster
+     than re-simulating each point;
+  3. replay predictions for integer-compatible knob points track real
+     re-simulation (reported as relative error per point).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.analysis import dag as dag_mod
+from repro.analysis import whatif
+from repro.configs.llama3 import AttnWorkload
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+
+from benchmarks.common import Sink
+
+WORKLOAD = AttnWorkload(name="fa3-bench", B=1, L=1024, S=2048, H_kv=2, G=2,
+                        D=128)
+TMA_POINTS = (0.5, 1.0, 2.0)
+
+
+def run(sink: Sink):
+    w, cfg = WORKLOAD, H800
+    t0 = time.perf_counter()
+    base = simulate_fa3(w, cfg, fidelity="full", record_events=True)
+    sim_s = time.perf_counter() - t0
+    dag = dag_mod.build(base.trace.events, base.trace.dispatch_parent)
+
+    # (1) x1.0 identity
+    r1 = whatif.replay(dag)
+    id_err = abs(r1.makespan - base.cycles) / base.cycles
+    sink.row(check="identity", pred=r1.makespan, sim=base.cycles,
+             rel_err=id_err, ok=id_err <= 0.01)
+
+    # (2) 3-point TMA sweep: replay vs re-simulate
+    t0 = time.perf_counter()
+    preds = {k: whatif.replay(dag, whatif.Knobs(tma_bw=k)).makespan
+             for k in TMA_POINTS}
+    replay_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    resims = {}
+    for k in TMA_POINTS:
+        if k == 1.0:
+            resims[k] = base.cycles
+            continue
+        r = simulate_fa3(w, whatif.machine_for(cfg, whatif.Knobs(tma_bw=k)),
+                         fidelity="full")
+        resims[k] = r.cycles
+    resim_s = time.perf_counter() - t0
+
+    speedup = resim_s / max(replay_s, 1e-9)
+    sink.row(check="sweep_speed", replay_s=replay_s, resim_s=resim_s,
+             speedup=speedup, ok=speedup >= 10.0)
+
+    # (3) accuracy per point
+    for k in TMA_POINTS:
+        err = abs(preds[k] - resims[k]) / max(resims[k], 1e-9)
+        sink.row(check="tma_point", tma_bw=k, pred=preds[k], resim=resims[k],
+                 rel_err=err)
+
+    sink.derived.update({
+        "identity_rel_err": id_err,
+        "sweep_speedup_vs_resim": speedup,
+        "events": len(base.trace.events),
+        "sim_s": sim_s,
+    })
+
+
+if __name__ == "__main__":
+    import sys
+
+    s = Sink("whatif")
+    run(s)
+    print(s.derived)
+    # enforce the acceptance criteria when run standalone (CI step)
+    failed = [r for r in s.rows if r.get("ok") is False]
+    if failed:
+        print(f"ACCEPTANCE FAILED: {failed}")
+        sys.exit(1)

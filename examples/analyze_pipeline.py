@@ -1,0 +1,99 @@
+"""Pipeline analysis CLI: stall attribution, critical path, what-if replay.
+
+Simulate one FlashAttention-3 launch with event recording, then ask the
+questions the flat gantt chart could not answer:
+
+  where did each warpgroup's idle cycles go?      (stall buckets)
+  what sequence of operations bounds the kernel?  (critical path)
+  what if TMA bandwidth / WGMMA throughput / softmax cost changed?
+                                                  (DAG replay, no resim)
+
+    PYTHONPATH=src python examples/analyze_pipeline.py
+    PYTHONPATH=src python examples/analyze_pipeline.py \
+        --model 8B --seqlen 2048 --knob tma_bw=2 --knob wgmma=1.5
+    PYTHONPATH=src python examples/analyze_pipeline.py \
+        --sweep tma_bw=0.5,1,2,4 --json results/whatif.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.analysis import critical_path as cp
+from repro.analysis import dag as dag_mod
+from repro.analysis import report, whatif
+from repro.analysis.sweep import SweepPoint, knob_grid, run_sweep
+from repro.configs.llama3 import workload
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+
+
+def _parse_knob(spec: str):
+    name, _, val = spec.partition("=")
+    if name not in ("tma_bw", "wgmma", "softmax"):
+        raise argparse.ArgumentTypeError(f"unknown knob {name!r}")
+    return name, [float(v) for v in val.split(",")]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--model", default="8B", choices=("8B", "70B", "405B"))
+    ap.add_argument("--seqlen", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--causal", action="store_true")
+    ap.add_argument("--fidelity", default="auto",
+                    choices=("auto", "full", "hierarchical"))
+    ap.add_argument("--knob", action="append", default=[], type=_parse_knob,
+                    metavar="NAME=K[,K...]",
+                    help="what-if multiplier(s): tma_bw / wgmma / softmax; "
+                         "repeatable, values form a cartesian grid")
+    ap.add_argument("--sweep", action="append", default=[], type=_parse_knob,
+                    help="alias of --knob (reads better for multi-point runs)")
+    ap.add_argument("--top", type=int, default=8,
+                    help="show the N widest-idle warpgroups (0 = all)")
+    ap.add_argument("--json", default="", help="dump results to this path")
+    args = ap.parse_args()
+
+    w = workload(args.model, args.seqlen, batch=args.batch, causal=args.causal)
+    print(f"simulating {w.name} on {H800.name} (fidelity={args.fidelity}) ...")
+    res = simulate_fa3(w, H800, fidelity=args.fidelity, record_events=True)
+    print(f"  {res.cycles:.0f} cycles = {res.latency_us:.1f} us "
+          f"({res.fidelity}, {len(res.trace.events)} events)\n")
+
+    dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
+
+    rep = cp.attribute_stalls(dag)
+    print(report.render_stall_report(rep, top=args.top))
+    print()
+
+    path = cp.critical_path(dag)
+    summary = cp.path_summary(dag, path)
+    print(report.render_critical_path(dag, path, summary))
+    print()
+
+    knob_axes = {"tma_bw": (1.0,), "wgmma": (1.0,), "softmax": (1.0,)}
+    for name, vals in args.knob + args.sweep:
+        knob_axes[name] = tuple(vals)
+    grid = knob_grid(**knob_axes)
+    if len(grid) > 1 or not grid[0].is_baseline():
+        rows = run_sweep([SweepPoint(workload=w, machine=H800,
+                                     fidelity=args.fidelity)],
+                         grid, processes=1)
+        print(report.render_whatif_table(rows))
+    else:
+        rows = []
+        print("(no what-if knobs given; try --knob tma_bw=0.5,1,2)")
+
+    if args.json:
+        report.save_json(args.json, {
+            "workload": w.name, "cycles": res.cycles,
+            "stalls": {"per_wg": rep.per_wg, "meta": rep.meta,
+                       "totals": rep.totals()},
+            "critical_path_summary": summary,
+            "whatif": rows,
+        })
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

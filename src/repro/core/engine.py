@@ -41,7 +41,7 @@ class CTATrace:
 class WGThread:
     __slots__ = ("trace", "pc", "state", "cta", "wg_id", "sm", "busy_until",
                  "wgmma_groups", "tma_groups", "mb_expected", "acq_count",
-                 "bar_count", "gantt", "label")
+                 "bar_count", "label")
 
     def __init__(self, trace, cta, wg_id):
         self.trace = trace
@@ -57,7 +57,6 @@ class WGThread:
         self.mb_expected: Dict[int, int] = {}
         self.acq_count: Dict[int, int] = {}
         self.bar_count: Dict[int, int] = {}
-        self.gantt: List[Tuple[str, int, int]] = []
         self.label = ""
 
     def done(self):
@@ -88,33 +87,32 @@ class TensorCoreEngine:
         self.cfg = cfg
         self.evq = evq
         self.sm = sm
-        self.buffer: List[Tuple[WGThread, Instr]] = []
+        self.buffer: List[Tuple[WGThread, Instr, int]] = []
         self.busy_until = 0
         self.busy_cycles = 0
-        self.gantt: List[Tuple[str, int, int]] = []
 
     def can_accept(self) -> bool:
         return len(self.buffer) < self.cfg.wgmma_issue_buffer
 
-    def push(self, cycle: int, th: WGThread, ins: Instr):
+    def push(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
         g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
         g[0] += 1
-        self.buffer.append((th, ins))
+        self.buffer.append((th, ins, nid))
         self._pump(cycle)
 
     def _pump(self, cycle: int):
         if not self.buffer:
             return
         start = max(cycle, self.busy_until)
-        th, ins = self.buffer.pop(0)
+        th, ins, nid = self.buffer.pop(0)
         # GPU mode: FP16 m64nNk16 completes in ~N/2 cycles (paper §4.2);
         # TPU mode: the tracegen precomputes MXU cycles into ins.cycles.
         dur = ins.cycles if ins.cycles > 0 else max(
             1, int(round(ins.n / self.cfg.wgmma_n_cycles_divisor)))
         self.busy_until = start + dur
         self.busy_cycles += dur
-        if self.sm.record_gantt:
-            self.gantt.append((f"mma:{th.label}:{ins.tag}", start, start + dur))
+        if self.sm.tracer is not None:
+            self.sm.tracer.on_mma(nid, th, ins, start, start + dur)
 
         def complete():
             g = th.wgmma_groups[ins.gid]
@@ -141,9 +139,9 @@ class TMAEngine:
         self._kick_scheduled = False
         self._issue_cycle = -1
         self._issued_in_cycle = 0
-        self.gantt: List[Tuple[str, int, int]] = []
 
-    def submit_load(self, cycle: int, th: WGThread, ins: Instr):
+    def submit_load(self, cycle: int, th: WGThread, ins: Instr,
+                    nid: int = -1):
         tm: TensorMap = self.tmaps[ins.map_id]
         lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
                               dedup=self.cfg.tma_dedup)
@@ -153,21 +151,22 @@ class TMAEngine:
             0 if ins.bulk else self.cfg.tma_tmap_setup_latency)
         job = {"lines": list(lines), "left": len(lines), "th": th,
                "sid": ins.sid, "write": False, "tag": ins.tag, "t0": cycle,
-               "inflight": 0}
+               "inflight": 0, "nid": nid, "setup": setup}
         self.evq.push(cycle + setup, lambda: self._start(job))
 
-    def submit_store(self, cycle: int, th: WGThread, ins: Instr):
+    def submit_store(self, cycle: int, th: WGThread, ins: Instr,
+                     nid: int = -1):
         tm: TensorMap = self.tmaps[ins.map_id]
         lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
                               dedup=self.cfg.tma_dedup)
         g = th.tma_groups.setdefault(ins.gid, [0, 0, False])
         g[0] += 1
-        job = {"lines": list(lines), "left": len(lines), "th": th,
-               "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
-               "inflight": 0}
         # stores bypass the TensorMap setup path only when bulk (Fig. 2);
         # FA3's O store uses a TensorMap -> full setup
         setup = self.cfg.tma_launch_latency + self.cfg.tma_tmap_setup_latency
+        job = {"lines": list(lines), "left": len(lines), "th": th,
+               "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
+               "inflight": 0, "nid": nid, "setup": setup}
         self.evq.push(cycle + setup, lambda: self._start(job))
 
     def _start(self, job):
@@ -226,15 +225,20 @@ class TMAEngine:
 
     def _finish(self, job):
         th: WGThread = job["th"]
-        if self.sm.record_gantt:
-            self.gantt.append((f"tma:{th.label}:{job['tag']}", job["t0"],
-                               self._now()))
+        signal_n = 0
         if job["write"]:
             g = th.tma_groups[job["gid"]]
             g[1] += 1
         else:
             cta = th.cta
             cta.mbarrier[job["sid"]] = cta.mbarrier.get(job["sid"], 0) + 1
+            signal_n = cta.mbarrier[job["sid"]]
+        if self.sm.tracer is not None:
+            self.sm.tracer.on_tma(
+                job["nid"], th, write=job["write"], tag=job["tag"],
+                t0=job["t0"], t1=self._now(), fixed=job["setup"],
+                sid=job.get("sid", -1), gid=job.get("gid", -1),
+                signal_n=signal_n)
         self.sm.wake_all()
 
 
@@ -244,7 +248,7 @@ class SM:
         self.cfg = cfg
         self.engine = engine
         self.evq = engine.evq
-        self.record_gantt = engine.record_gantt
+        self.tracer = engine.tracer
         self.ctas: List[CTA] = []
         self.tc = TensorCoreEngine(cfg, self.evq, self)
         self.tma = TMAEngine(cfg, self.evq, self, engine.lrc, engine.tmaps)
@@ -312,8 +316,11 @@ class SM:
                     if self.current is th:
                         self.current = None
                     continue             # GTO: fall through to next-oldest
+                # trace before counters mutate: dep ordinals snapshot here
+                nid = (self.tracer.on_issue(cycle, th, ins)
+                       if self.tracer is not None else -1)
                 self._apply_blocking(th, ins)
-                self._execute(cycle, th, ins)
+                self._execute(cycle, th, ins, nid)
                 th.pc += 1
                 self.current = th        # greedy: keep issuing this thread
                 issued = True
@@ -344,15 +351,15 @@ class SM:
             if th.state == READY and not th.done() and th.busy_until <= cycle:
                 yield th
 
-    def _execute(self, cycle: int, th: WGThread, ins: Instr):
+    def _execute(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
         op = ins.op
         cta = th.cta
         if op == isa.TMA_TENSOR:
-            self.tma.submit_load(cycle, th, ins)
+            self.tma.submit_load(cycle, th, ins, nid)
         elif op == isa.TMA_STORE:
-            self.tma.submit_store(cycle, th, ins)
+            self.tma.submit_store(cycle, th, ins, nid)
         elif op == isa.WGMMA:
-            self.tc.push(cycle, th, ins)
+            self.tc.push(cycle, th, ins, nid)
         elif op == isa.WGMMA_COMMIT:
             g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
             g[2] = True
@@ -367,8 +374,6 @@ class SM:
             self.wake_all()
         elif op == isa.BUBBLES:
             th.busy_until = cycle + ins.cycles
-            if self.record_gantt:
-                th.gantt.append((f"bubble:{th.label}", cycle, cycle + ins.cycles))
             self.evq.push(th.busy_until, self.wake_all)
         # waits that reached here had their condition met: no-op
 
@@ -379,10 +384,7 @@ class SM:
 
     def _retire_cta(self, cta: CTA):
         self.ctas.remove(cta)
-        if self.record_gantt:
-            for th in cta.threads:
-                self.engine.retired_gantt.extend(th.gantt)
-        self.engine.cta_retired(self)
+        self.engine.cta_retired(self, cta)
 
     def all_blocked(self, cycle: int) -> bool:
         for th in self.threads():
@@ -402,7 +404,7 @@ class Engine:
 
     def __init__(self, machine: GPUMachine, n_sms: Optional[int] = None,
                  mem_scale: Optional[float] = None, record_gantt: bool = False,
-                 seed: int = 0, direct_hbm: bool = False):
+                 seed: int = 0, direct_hbm: bool = False, tracer=None):
         self.cfg = machine
         self.n_sms = n_sms or machine.num_sms
         scale = mem_scale if mem_scale is not None else self.n_sms / machine.num_sms
@@ -410,14 +412,18 @@ class Engine:
         self.lrc, self.l2, self.dram = build_memory(machine, self.evq, scale,
                                                     seed, direct=direct_hbm)
         self.tmaps: Dict[int, TensorMap] = {}
-        self.record_gantt = record_gantt
+        if tracer is None and record_gantt:
+            # gantt is now a view over the structured event trace
+            from repro.analysis.events import EventTracer
+            tracer = EventTracer()
+        self.tracer = tracer
+        self.record_gantt = tracer is not None
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
         self.pending: List[CTATrace] = []
         self.cycle = 0
         self.launched = 0
         self.retired = 0
         self.deadlocked = False
-        self.retired_gantt: List[Tuple[str, int, int]] = []
         self._active = set(range(self.n_sms))
 
     # ------------------------------------------------------------------
@@ -428,7 +434,7 @@ class Engine:
         self.pending.extend(ctas)
         self._dispatch()
 
-    def _dispatch(self):
+    def _dispatch(self, parent: Optional[int] = None):
         for sm in self.sms:
             while self.pending and sm.has_slot():
                 trace = self.pending.pop(0)
@@ -437,11 +443,13 @@ class Engine:
                 sm.ctas.append(cta)
                 for th in cta.threads:
                     th.sm = sm
+                if self.tracer is not None:
+                    self.tracer.on_dispatch(cta.idx, parent)
                 self.mark_active(sm)
 
-    def cta_retired(self, sm: SM):
+    def cta_retired(self, sm: SM, cta: CTA):
         self.retired += 1
-        self._dispatch()
+        self._dispatch(parent=cta.idx)
 
     def mark_active(self, sm: SM):
         self._active.add(sm.sm_id)
@@ -498,10 +506,8 @@ class Engine:
         }
 
     def gantt(self) -> List[Tuple[str, int, int]]:
-        out = list(self.retired_gantt)
-        for sm in self.sms:
-            out.extend(sm.tc.gantt)
-            out.extend(sm.tma.gantt)
-            for th in sm.threads():
-                out.extend(th.gantt)
-        return out
+        """Legacy flat-interval view, derived from the structured trace."""
+        if self.tracer is None:
+            return []
+        from repro.core.gantt import from_events
+        return from_events(self.tracer.events)

@@ -1,13 +1,29 @@
 """Pipeline Gantt chart extraction (paper Fig. 7).
 
-Renders the producer/consumer overlap and ping-pong scheduling of one SM as
-a text chart, and exports raw intervals for plotting.
+The raw data now lives in the structured event trace
+(:mod:`repro.analysis.events`); this module is a *view* that flattens
+``PipeEvent`` records back into ``(tag, start, end)`` intervals for the text
+chart and external plotting.
 """
 from __future__ import annotations
 
 from typing import List, Tuple
 
 LANES = ("tma", "mma", "bubble")
+
+
+def from_events(events) -> List[Tuple[str, int, int]]:
+    """Flatten PipeEvents into the legacy gantt tuples (engine-occupancy
+    intervals only: TMA jobs, tensor-core execution, softmax bubbles)."""
+    out: List[Tuple[str, int, int]] = []
+    for ev in events:
+        if ev.kind == "mma":
+            out.append((f"mma:{ev.label}:{ev.tag}", ev.t0, ev.t1))
+        elif ev.kind == "tma":
+            out.append((f"tma:{ev.label}:{ev.tag}", ev.t0, ev.t1))
+        elif ev.kind == "bubble":
+            out.append((f"bubble:{ev.label}", ev.t0, ev.t1))
+    return out
 
 
 def lane_of(tag: str) -> str:
@@ -17,9 +33,7 @@ def lane_of(tag: str) -> str:
 def filter_sm(gantt: List[Tuple[str, int, int]], cta_ids=(0, 1)):
     """Keep intervals belonging to the given CTA ids (one SM's residents)."""
     keep = tuple(f"cta{i}/" for i in cta_ids)
-    return [g for g in gantt
-            if any(k in g[0] for k in keep) or lane_of(g[0]) == "mma"
-            and any(k in g[0] for k in keep)]
+    return [g for g in gantt if any(k in g[0] for k in keep)]
 
 
 def render_text(gantt: List[Tuple[str, int, int]], width: int = 100,

@@ -41,6 +41,8 @@ class SimResult:
     l2_stats: dict
     deadlocked: bool
     gantt: Optional[list] = None
+    trace: Optional[object] = None   # analysis.events.EventTracer of the
+                                     # (first) simulated engine run
 
 
 def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False):
@@ -55,7 +57,8 @@ def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False):
 
 def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
                  tiling: FA3Tiling = FA3Tiling(), fidelity: str = "auto",
-                 n_sub: int = 8, record_gantt: bool = False) -> SimResult:
+                 n_sub: int = 8, record_gantt: bool = False,
+                 record_events: bool = False) -> SimResult:
     # total CTA count is analytic; only the traces we will actually run are
     # materialized (hierarchical mode simulates the first two waves only)
     total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
@@ -65,9 +68,10 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     ctas, tmaps = fa3_kernel_ctas(
         cfg, B=w.B, H_kv=w.H_kv, G=w.G, L=w.L, S=w.S, D=w.D, tiling=tiling,
         causal=w.causal, max_ctas=min(total, need))
+    record = record_gantt or record_events
 
     if fidelity == "full":
-        eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record_gantt)
+        eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record)
         return SimResult(
             latency_us=st["time_us"], cycles=st["cycles"], fidelity="full",
             n_ctas_total=total, n_ctas_simulated=total,
@@ -76,14 +80,15 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
             l2_delivered_bytes=st["l2_req_bytes"],
             dram_bytes=st["dram_bytes"], l2_stats=st["l2"],
             deadlocked=eng.deadlocked,
-            gantt=eng.gantt() if record_gantt else None)
+            gantt=eng.gantt() if record_gantt else None,
+            trace=eng.tracer if record_events else None)
 
     # hierarchical: n_sub SMs stand in for the machine; two-wave composition
     per_wave_sub = n_sub * cfg.occupancy_limit
     scale = n_sub / cfg.num_sms
     one = ctas[:per_wave_sub]
     two = ctas[:2 * per_wave_sub]
-    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record_gantt)
+    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record)
     if len(two) > len(one):
         eng2, st2 = _run(cfg, two, tmaps, n_sub, scale)
         marginal = max(st2["cycles"] - st1["cycles"], 1)
@@ -105,7 +110,8 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         l2_delivered_bytes=st2["l2_req_bytes"] * traf_scale,
         dram_bytes=st2["dram_bytes"] * traf_scale,
         l2_stats=st2["l2"], deadlocked=eng1.deadlocked or eng2.deadlocked,
-        gantt=eng1.gantt() if record_gantt else None)
+        gantt=eng1.gantt() if record_gantt else None,
+        trace=eng1.tracer if record_events else None)
 
 
 def validate_against_analytical(w: AttnWorkload, cfg: GPUMachine,

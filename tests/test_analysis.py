@@ -1,0 +1,251 @@
+"""repro.analysis tests: DAG construction on a hand-built trace, critical
+path vs makespan, stall-bucket accounting, what-if identity/monotonicity,
+sweep driver + cache, and the gantt-as-view refactor."""
+import pytest
+
+from repro.analysis import critical_path as cp
+from repro.analysis import dag as dag_mod
+from repro.analysis import events as ev_mod
+from repro.analysis import report, whatif
+from repro.analysis.events import EventTracer
+from repro.analysis.sweep import SweepPoint, knob_grid, run_sweep
+from repro.configs.llama3 import AttnWorkload
+from repro.core import isa
+from repro.core.engine import CTATrace, Engine
+from repro.core.gantt import filter_sm, from_events, render_text
+from repro.core.isa import Instr, TensorMap
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+
+
+def _tmap(map_id=0, rows=4, cols=64, esz=2):
+    return TensorMap(map_id, 0, (1, 1 << 16, cols),
+                     (1 << 34, cols * esz, esz), (1, rows, cols), esz)
+
+
+def _run_traced(ctas, tmaps=None, n_sms=1):
+    eng = Engine(H800, n_sms=n_sms, mem_scale=1.0, record_gantt=True)
+    for tm in (tmaps or {}).values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    assert not eng.deadlocked
+    return eng, st
+
+
+def _hand_cta():
+    """Producer loads one tile; consumer waits, matmuls, drains, bubbles."""
+    prod = [
+        Instr(isa.ACQUIRE_STAGE, sid=0),
+        Instr(isa.TMA_TENSOR, map_id=0, sid=0, origin=(0, 0, 0), tag="K"),
+    ]
+    cons = [
+        Instr(isa.MB_WAIT, sid=0),
+        Instr(isa.WGMMA, gid=0, m=64, n=64, k=16, tag="QK"),
+        Instr(isa.WGMMA_COMMIT, gid=0),
+        Instr(isa.WGMMA_WAIT, gid=0, n=0),
+        Instr(isa.RELEASE_STAGE, sid=0),
+        Instr(isa.BUBBLES, cycles=100),
+    ]
+    return CTATrace(wgs=[prod, cons], n_consumers=1, name="hand")
+
+
+def _hand_dag():
+    eng, st = _run_traced([_hand_cta()], {0: _tmap()})
+    return dag_mod.from_engine(eng), eng, st
+
+
+# ---------------------------------------------------------------------------
+# DAG construction
+# ---------------------------------------------------------------------------
+
+def test_dag_hand_trace_edges():
+    dag, eng, st = _hand_dag()
+    evs = dag.events
+    by_op = {}
+    for e in evs:
+        by_op.setdefault(e.op, []).append(e)
+
+    # every executed instruction + 1 TMA job + 1 TC execution became events
+    assert len(by_op[ev_mod.TMA_LOAD_JOB]) == 1
+    assert len(by_op[ev_mod.WGMMA_EXEC]) == 1
+    assert len(by_op[isa.MB_WAIT]) == 1
+
+    # mbarrier signal -> wait edge, with the DONE release mode
+    wait = by_op[isa.MB_WAIT][0]
+    tma = by_op[ev_mod.TMA_LOAD_JOB][0]
+    assert (tma.eid, dag_mod.DONE) in dag.preds[wait.eid]
+    assert wait.t0 >= tma.t_done
+
+    # drain wait -> the tensor-core execution that satisfied it
+    drain = by_op[isa.WGMMA_WAIT][0]
+    mma = by_op[ev_mod.WGMMA_EXEC][0]
+    assert (mma.eid, dag_mod.DONE) in dag.preds[drain.eid]
+
+    # the WGMMA execution hangs off its issuing lane event
+    wg_issue = by_op[isa.WGMMA][0]
+    assert (wg_issue.eid, dag_mod.END) in dag.preds[mma.eid]
+
+    # program order chains each warpgroup lane
+    for label, eids in dag.threads.items():
+        for a, b in zip(eids, eids[1:]):
+            assert (a, dag_mod.END) in dag.preds[b]
+            assert evs[a].t1 <= evs[b].t0
+
+    # event ids are a topological order and no edge was clamped
+    assert all(p < e.eid for e in evs for p, _ in dag.preds[e.eid])
+    assert dag.negative_slack == 0
+
+
+def test_dag_makespan_matches_engine():
+    dag, eng, st = _hand_dag()
+    assert abs(dag.makespan - st["cycles"]) <= 2
+
+
+# ---------------------------------------------------------------------------
+# critical path
+# ---------------------------------------------------------------------------
+
+def test_critical_path_length_equals_makespan():
+    dag, _, _ = _hand_dag()
+    path = cp.critical_path(dag)
+    assert cp.path_length(dag, path) == dag.makespan
+    # path is causally ordered and ends at the sink
+    assert path[-1] == dag.sink()
+    assert all(a < b for a, b in zip(path, path[1:]))
+    # contributions telescope to the makespan
+    summary = cp.path_summary(dag, path)
+    assert sum(summary.values()) == dag.makespan
+
+
+def test_critical_path_fa3():
+    w = AttnWorkload(name="cp", B=1, L=128, S=512, H_kv=1, G=2, D=128)
+    res = simulate_fa3(w, H800, fidelity="full", record_events=True)
+    dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
+    path = cp.critical_path(dag)
+    summary = cp.path_summary(dag, path)
+    assert sum(summary.values()) == dag.makespan
+    assert abs(dag.makespan - res.cycles) <= 2
+    # an FA3 kernel's critical path must traverse real work, not just waits
+    assert summary.get("wgmma", 0) + summary.get("tma", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# stall attribution
+# ---------------------------------------------------------------------------
+
+def test_stall_buckets_sum_to_idle():
+    w = AttnWorkload(name="stall", B=1, L=128, S=512, H_kv=1, G=2, D=128)
+    res = simulate_fa3(w, H800, fidelity="full", record_events=True)
+    dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
+    rep = cp.attribute_stalls(dag)
+    assert rep.per_wg
+    for label, buckets in rep.per_wg.items():
+        assert set(buckets) == set(cp.BUCKETS)
+        assert sum(buckets.values()) == rep.meta[label]["idle"], label
+        assert all(v >= 0 for v in buckets.values())
+    # producers stream K/V through acquire/release: their idle must be
+    # dominated by ring-buffer (barrier) waits, and consumers must show
+    # tma or wgmma waits somewhere
+    prod = [l for l in rep.per_wg if l.endswith("wg0")]
+    assert any(rep.per_wg[l]["barrier-wait"] > 0 for l in prod)
+    text = report.render_stall_report(rep, top=4)
+    assert "tma-wait" in text and "TOTAL" in text
+
+
+def test_softmax_bubble_exposure_on_mufu_starved_machine():
+    """Starve MUFU throughput so softmax can no longer hide behind the
+    ping-pong: the transitive (chain) attribution must surface the exposure
+    as softmax-bubble idle, while bucket sums stay exact."""
+    from repro.core.machine import h800_variant
+    cfg = h800_variant(mufu_ops_per_cycle=2)
+    w = AttnWorkload(name="sx", B=1, L=128, S=1024, H_kv=1, G=1, D=128)
+    res = simulate_fa3(w, cfg, fidelity="full", record_events=True)
+    dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
+    rep = cp.attribute_stalls(dag)
+    tot = rep.totals()
+    assert tot["softmax-bubble"] > 0
+    for label, buckets in rep.per_wg.items():
+        assert sum(buckets.values()) == rep.meta[label]["idle"], label
+
+
+# ---------------------------------------------------------------------------
+# what-if replay
+# ---------------------------------------------------------------------------
+
+def test_whatif_identity_is_exact():
+    w = AttnWorkload(name="id", B=1, L=128, S=512, H_kv=1, G=2, D=128)
+    res = simulate_fa3(w, H800, fidelity="full", record_events=True)
+    dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
+    r = whatif.replay(dag)                      # all knobs x1.0
+    assert r.makespan == dag.makespan           # exact, not approximate
+    assert abs(r.makespan - res.cycles) / res.cycles <= 0.01
+
+
+def test_whatif_monotonic_and_bounded():
+    dag, _, _ = _hand_dag()
+    base = whatif.replay(dag).makespan
+    faster_mma = whatif.replay(dag, whatif.Knobs(wgmma=4.0)).makespan
+    faster_tma = whatif.replay(dag, whatif.Knobs(tma_bw=4.0)).makespan
+    slower_tma = whatif.replay(dag, whatif.Knobs(tma_bw=0.25)).makespan
+    assert faster_mma <= base
+    assert faster_tma <= base
+    assert slower_tma >= base
+    # speeding every resource 2x can at most halve the scalable part
+    allfast = whatif.replay(dag, whatif.Knobs(tma_bw=2, wgmma=2, softmax=2))
+    assert base / 2 <= allfast.makespan <= base
+
+
+def test_whatif_hand_trace_tma_scaling():
+    """On the hand trace the TMA transfer is on the critical path: slowing
+    it 4x must push the makespan out by ~3x the streaming portion."""
+    dag, _, _ = _hand_dag()
+    tma = next(e for e in dag.events if e.op == ev_mod.TMA_LOAD_JOB)
+    stream = (tma.t1 - tma.t0) - tma.fixed
+    assert stream > 0
+    slow = whatif.replay(dag, whatif.Knobs(tma_bw=0.25)).makespan
+    assert slow == pytest.approx(dag.makespan + 3 * stream, abs=1)
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+def test_sweep_serial_with_cache(tmp_path):
+    w = AttnWorkload(name="sweep", B=1, L=128, S=256, H_kv=1, G=1, D=128)
+    points = [SweepPoint(workload=w, machine=H800, fidelity="full")]
+    grid = knob_grid(tma_bw=(1.0, 2.0))
+    rows = run_sweep(points, grid, processes=1, cache_dir=str(tmp_path))
+    assert len(rows) == 2
+    base = next(r for r in rows if r["knobs"]["tma_bw"] == 1.0)
+    assert base["pred_cycles"] == pytest.approx(base["base_cycles"], rel=0.01)
+    assert all(r["speedup"] > 0 for r in rows)
+    cached = list(tmp_path.glob("whatif_*.json"))
+    assert len(cached) == 1
+    # second run must be served from cache (identical rows, no resim)
+    rows2 = run_sweep(points, grid, processes=1, cache_dir=str(tmp_path))
+    assert rows2 == rows
+    text = report.render_whatif_table(rows)
+    assert "speedup" in text
+
+
+# ---------------------------------------------------------------------------
+# gantt as a view over events
+# ---------------------------------------------------------------------------
+
+def test_gantt_is_view_over_events():
+    eng, st = _run_traced([_hand_cta()], {0: _tmap()})
+    g = eng.gantt()
+    assert g == from_events(eng.tracer.events)
+    lanes = {tag.split(":")[0] for tag, _, _ in g}
+    assert lanes == {"tma", "mma", "bubble"}
+    assert render_text(g)
+
+
+def test_filter_sm_keeps_only_requested_ctas():
+    # the old `A or (mma and A)` precedence accident reduced to plain A;
+    # the simplified form must keep that (correct) behavior
+    gantt = [("tma:cta0/wg0:K", 0, 10), ("mma:cta1/wg1:QK", 5, 15),
+             ("mma:cta2/wg1:QK", 5, 15), ("bubble:cta3/wg2", 0, 3)]
+    kept = filter_sm(gantt, cta_ids=(0, 1))
+    assert kept == gantt[:2]

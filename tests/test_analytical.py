@@ -3,6 +3,7 @@ property tests (paper §3, §6)."""
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: degrade, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.llama3 import AttnWorkload, workload

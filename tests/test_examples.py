@@ -6,6 +6,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess e2e examples: minutes, not tier-1
+
 ROOT = Path(__file__).resolve().parent.parent
 ENV_PY = [sys.executable]
 

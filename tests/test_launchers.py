@@ -4,6 +4,10 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess e2e launchers: minutes, not tier-1
+
 ROOT = Path(__file__).resolve().parent.parent
 
 

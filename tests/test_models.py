@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # jax model-zoo smoke: minutes, not tier-1
+
 from repro.configs import registry
 from repro.configs.base import SHAPES
 from repro.models import api, attention, mamba, rwkv

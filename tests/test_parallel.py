@@ -8,6 +8,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: degrade, don't die
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

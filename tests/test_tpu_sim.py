@@ -1,6 +1,7 @@
 """TPU-mode Sim-FA (hardware adaptation): grid-pipeline traces, analytical
 model, and sim-guided autotuning."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: degrade, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.llama3 import AttnWorkload
