@@ -1,0 +1,155 @@
+"""Engine wall-clock throughput benchmark — the perf-trajectory baseline.
+
+Measures how fast the cycle engine *simulates* (not what it predicts):
+wall seconds, simulated cycles/s and executed events/s on small / medium /
+full-fidelity FA3 launches, for the default waiter-indexed scheduler and —
+on the full workload — the legacy broadcast fallback, so the speedup the
+waiter scheduler buys stays measurable forever.
+
+    PYTHONPATH=src:. python benchmarks/bench_engine.py            # full run
+    PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke    # CI guard
+    PYTHONPATH=src:. python benchmarks/bench_engine.py --profile  # cProfile
+
+A standalone full run rewrites ``BENCH_engine.json`` at the repo root
+(committed: the baseline subsequent PRs are held to) plus the usual
+``results/bench/engine.json``; via ``benchmarks/run.py`` only the latter is
+written, so sweeping all benches never clobbers the committed baseline.
+``--smoke`` runs the tiny workload only, validates the JSON schema, and
+writes nothing at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.engine import Engine
+from repro.core.machine import H800
+from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
+
+from benchmarks.common import Sink, maybe_profile
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINE_PATH = REPO_ROOT / "BENCH_engine.json"
+
+WORKLOADS = {
+    # name -> AttnWorkload; all run at fidelity "full" (every CTA, all SMs)
+    "smoke": AttnWorkload(name="smoke", B=1, L=128, S=256, H_kv=1, G=1,
+                          D=128),
+    "small": AttnWorkload(name="small", B=1, L=256, S=512, H_kv=1, G=2,
+                          D=128),
+    "medium": AttnWorkload(name="medium", B=1, L=512, S=1024, H_kv=2, G=2,
+                           D=128),
+    # the reference full-fidelity FA3 launch (same as bench_whatif)
+    "full": AttnWorkload(name="full", B=1, L=1024, S=2048, H_kv=2, G=2,
+                         D=128),
+}
+
+ROW_SCHEMA = ("workload", "wall_s", "sim_cycles", "cycles_per_s",
+              "events_per_s")
+
+# One-time measurement of the pre-refactor (PR<4) broadcast engine on the
+# "full" workload, taken on the baseline machine when this bench was
+# introduced: wall median of 3 runs.  Only meaningful relative to wall
+# times measured on that machine; the re-measurable comparator on any
+# machine is the broadcast-fallback row below.
+PRE_REFACTOR_FULL_WALL_S = 18.8
+
+
+def _measure(w: AttnWorkload, broadcast: bool = False) -> dict:
+    cfg = H800
+    tiling = FA3Tiling()
+    total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
+    ctas, tmaps = fa3_kernel_ctas(
+        cfg, B=w.B, H_kv=w.H_kv, G=w.G, L=w.L, S=w.S, D=w.D, tiling=tiling,
+        causal=w.causal, max_ctas=total)
+    eng = Engine(cfg, broadcast_wake=broadcast)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    t0 = time.perf_counter()
+    eng.launch(ctas)
+    st = eng.run()
+    wall = time.perf_counter() - t0
+    return {
+        "workload": w.name,
+        "wall_s": round(wall, 4),
+        "sim_cycles": st["cycles"],
+        "cycles_per_s": round(st["cycles"] / wall, 1),
+        "events_per_s": round(eng.evq.popped / wall, 1),
+        "n_ctas": len(ctas),
+        "scheduler": "broadcast" if broadcast else "waiter",
+        "dram_bytes": st["dram_bytes"],
+        "l2_req_bytes": st["l2_req_bytes"],
+        "tma_lines": st["tma_lines"],
+    }
+
+
+def validate_row(row: dict) -> None:
+    """The committed-baseline schema every row must carry."""
+    for key in ROW_SCHEMA:
+        assert key in row, f"BENCH_engine row missing {key!r}: {row}"
+    assert row["wall_s"] > 0 and row["sim_cycles"] > 0
+    assert row["cycles_per_s"] > 0 and row["events_per_s"] > 0
+
+
+def run(sink: Sink, smoke: bool = False, profile: bool = False):
+    names = ["smoke"] if smoke else ["small", "medium", "full"]
+    rows = []
+    with maybe_profile(profile):
+        for name in names:
+            row = _measure(WORKLOADS[name])
+            validate_row(row)
+            rows.append(row)
+            sink.row(**row)
+    if not smoke:
+        # broadcast fallback on the reference launch: the waiter scheduler's
+        # speedup, re-measurable on any machine
+        b = _measure(WORKLOADS["full"], broadcast=True)
+        sink.row(**b)
+        waiter = next(r for r in rows if r["workload"] == "full")
+        for key in ("sim_cycles", "dram_bytes", "l2_req_bytes", "tma_lines"):
+            assert waiter[key] == b[key], \
+                f"scheduler equivalence broken on {key}: {waiter[key]} != {b[key]}"
+        sink.derive(
+            speedup_vs_broadcast=round(b["wall_s"] / waiter["wall_s"], 2),
+            speedup_vs_pre_refactor=round(
+                PRE_REFACTOR_FULL_WALL_S / waiter["wall_s"], 2),
+            pre_refactor_full_wall_s=PRE_REFACTOR_FULL_WALL_S,
+            full_cycles_per_s=waiter["cycles_per_s"],
+        )
+    return rows
+
+
+def write_baseline(sink: Sink, rows: list) -> None:
+    """Overwrite the *committed* trajectory baseline.  Standalone invocation
+    only — ``benchmarks/run.py`` runs must not clobber it in passing."""
+    baseline = {"bench": "engine", "rows": rows, "derived": sink.derived}
+    BASELINE_PATH.write_text(json.dumps(baseline, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload only; validate schema; write nothing")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the simulation and dump the top 20")
+    args = ap.parse_args()
+
+    sink = Sink("engine")
+    rows = run(sink, smoke=args.smoke, profile=args.profile)
+    if not args.smoke:
+        sink.finish()
+        write_baseline(sink, rows)
+        print(f"baseline written: {BASELINE_PATH}")
+        print(sink.derived)
+    else:
+        # CI guard: completed + schema-valid is the contract
+        for row in rows:
+            validate_row(row)
+        print("smoke ok:", json.dumps(rows))
+    sys.exit(0)

@@ -6,12 +6,36 @@ Every ``bench_*`` module exposes ``run(sink) -> None`` and registers rows via
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import time
 from pathlib import Path
 from typing import Any, Dict, List
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+@contextlib.contextmanager
+def maybe_profile(enabled: bool, top: int = 20, sort: str = "cumulative"):
+    """``--profile`` mode: cProfile the enclosed block and dump the top-N
+    functions (by cumulative time) to stdout.  No-op when disabled, so
+    benches can wrap their hot section unconditionally."""
+    if not enabled:
+        yield
+        return
+    import cProfile
+    import io
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        yield
+    finally:
+        prof.disable()
+        s = io.StringIO()
+        pstats.Stats(prof, stream=s).sort_stats(sort).print_stats(top)
+        print(s.getvalue(), flush=True)
 
 
 class Sink:

@@ -24,7 +24,7 @@ import argparse
 import importlib
 import traceback
 
-from benchmarks.common import Sink
+from benchmarks.common import Sink, maybe_profile
 
 BENCHES = [
     "kernels",
@@ -32,6 +32,7 @@ BENCHES = [
     "gantt",
     "ablations",
     "fa3_latency",
+    "engine",
     "traffic_l2",
     "traffic_dram",
     "tma_latency",
@@ -39,7 +40,8 @@ BENCHES = [
     "tma_bandwidth",
 ]
 
-FAST_SKIP = {"tma_bandwidth", "mshr", "tma_latency"}   # slowest three
+FAST_SKIP = {"tma_bandwidth", "mshr", "tma_latency",   # slowest microbenches
+             "engine"}   # full-fidelity launch + broadcast-fallback rerun
 
 
 def main(argv=None) -> int:
@@ -48,6 +50,9 @@ def main(argv=None) -> int:
                     help="comma-separated bench names")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slowest microbenches")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each bench and dump the top 20 by "
+                         "cumulative time (see benchmarks/common.py)")
     args = ap.parse_args(argv)
 
     names = list(BENCHES)
@@ -63,7 +68,8 @@ def main(argv=None) -> int:
         sink = Sink(name)
         try:
             mod = importlib.import_module(f"benchmarks.bench_{name}")
-            mod.run(sink)
+            with maybe_profile(args.profile):
+                mod.run(sink)
             out = sink.finish()
             summaries.append((name, out["wall_s"], out["derived"]))
             print(f"--- {name} ok ({out['wall_s']}s) "

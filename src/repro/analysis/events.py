@@ -77,6 +77,15 @@ class EventTracer:
     graph construction to :mod:`repro.analysis.dag`.  Event ids are a valid
     topological order of the eventual DAG: every event is created after all
     of its predecessors.
+
+    Contract with the engine's waiter-indexed scheduler: parking/waking
+    threads must never change *when* an instruction issues, only how the
+    engine finds it — so the ordinal snapshots here (``dep_n``, signal
+    counts) stay bit-identical between the waiter and broadcast schedulers
+    (enforced by ``tests/test_engine_equiv.py``).  Within one cycle, events
+    from different SMs are ordered by ascending SM id — the engine pins
+    that order deterministically; it is the one place the trace may differ
+    from pre-PR-4 runs, which inherited CPython set-iteration order.
     """
 
     def __init__(self):

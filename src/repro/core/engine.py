@@ -16,11 +16,25 @@ Implements the paper's Algorithm 1:
 Timing jumps between "interesting" cycles (event completions / ready
 threads); it never ticks idle cycles, which is what makes a Python
 implementation viable where the paper uses C++.
+
+Scheduling is *condition-indexed*: a thread whose wait condition fails is
+parked on a waiter list keyed by exactly what it waits for — an mbarrier
+``(cta, sid)`` signal, a stage-release count, its own WGMMA/TMA group
+drain, a named-barrier arrival, a tensor-core buffer slot, or a
+``busy_until`` timer — and each completion event wakes only the threads
+whose condition just became satisfiable.  A woken thread's condition is
+always re-validated at issue time in ``SM.step``, so a spurious wake is
+harmless; the waiter index only has to never *miss* a wake.  The legacy
+broadcast scheduler (every completion re-marks every resident thread
+READY and rescans) survives behind ``Engine(broadcast_wake=True)`` as a
+deadlock-safety / equivalence-testing fallback; both schedulers are
+cycle-for-cycle identical (see ``tests/test_engine_equiv.py``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import isa
 from repro.core.isa import Instr, TensorMap
@@ -39,12 +53,13 @@ class CTATrace:
 
 
 class WGThread:
-    __slots__ = ("trace", "pc", "state", "cta", "wg_id", "sm", "busy_until",
-                 "wgmma_groups", "tma_groups", "mb_expected", "acq_count",
-                 "bar_count", "label")
+    __slots__ = ("trace", "trace_len", "pc", "state", "cta", "wg_id", "sm",
+                 "busy_until", "wgmma_groups", "tma_groups", "wgmma_out",
+                 "tma_out", "mb_expected", "acq_count", "label", "parked")
 
     def __init__(self, trace, cta, wg_id):
         self.trace = trace
+        self.trace_len = len(trace)
         self.pc = 0
         self.state = READY
         self.cta = cta
@@ -54,18 +69,23 @@ class WGThread:
         # per-WG async group bookkeeping: gid -> [issued, completed, committed]
         self.wgmma_groups: Dict[int, List] = {}
         self.tma_groups: Dict[int, List] = {}
+        # committed-but-incomplete group ids; len() is the outstanding count
+        # the drain waits test, so WGMMA_WAIT/TMA_WAIT checks are O(1)
+        self.wgmma_out: set = set()
+        self.tma_out: set = set()
         self.mb_expected: Dict[int, int] = {}
         self.acq_count: Dict[int, int] = {}
-        self.bar_count: Dict[int, int] = {}
         self.label = ""
+        self.parked = False      # registered on a keyed waiter list
 
     def done(self):
-        return self.pc >= len(self.trace)
+        return self.pc >= self.trace_len
 
 
 class CTA:
     __slots__ = ("trace", "threads", "mbarrier", "stage_releases",
-                 "bar_arrivals", "n_consumers", "idx", "done_wgs")
+                 "bar_arrivals", "n_consumers", "idx", "done_wgs",
+                 "mb_waiters", "stage_waiters", "bar_waiters")
 
     def __init__(self, trace: CTATrace, idx: int):
         self.trace = trace
@@ -78,6 +98,10 @@ class CTA:
         self.stage_releases: Dict[int, int] = {}  # sid -> consumer releases
         self.bar_arrivals: Dict[int, int] = {}    # bid -> arrivals
         self.done_wgs = 0
+        # condition-indexed waiter lists (waiter-mode scheduler only)
+        self.mb_waiters: Dict[int, List[WGThread]] = {}
+        self.stage_waiters: Dict[int, List[WGThread]] = {}
+        self.bar_waiters: Dict[int, List[WGThread]] = {}
 
 
 class TensorCoreEngine:
@@ -87,7 +111,13 @@ class TensorCoreEngine:
         self.cfg = cfg
         self.evq = evq
         self.sm = sm
-        self.buffer: List[Tuple[WGThread, Instr, int]] = []
+        self.buffer: deque = deque()   # (WGThread, Instr, nid)
+        # Defensive waiter list: _pump pops synchronously on every push
+        # (serialization is modeled via busy_until), so with the current
+        # pipeline model can_accept() never fails and nothing parks here.
+        # The list exists so a future occupancy-accurate buffer model can't
+        # introduce a missed-wake deadlock on the WGMMA stall path.
+        self.waiters: List[WGThread] = []   # threads parked on a buffer slot
         self.busy_until = 0
         self.busy_cycles = 0
 
@@ -97,6 +127,9 @@ class TensorCoreEngine:
     def push(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
         g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
         g[0] += 1
+        if g[2] and g[1] == g[0] - 1:
+            # a committed, fully drained group id got reused: outstanding again
+            th.wgmma_out.add(ins.gid)
         self.buffer.append((th, ins, nid))
         self._pump(cycle)
 
@@ -104,7 +137,7 @@ class TensorCoreEngine:
         if not self.buffer:
             return
         start = max(cycle, self.busy_until)
-        th, ins, nid = self.buffer.pop(0)
+        th, ins, nid = self.buffer.popleft()
         # GPU mode: FP16 m64nNk16 completes in ~N/2 cycles (paper §4.2);
         # TPU mode: the tracegen precomputes MXU cycles into ins.cycles.
         dur = ins.cycles if ins.cycles > 0 else max(
@@ -113,68 +146,119 @@ class TensorCoreEngine:
         self.busy_cycles += dur
         if self.sm.tracer is not None:
             self.sm.tracer.on_mma(nid, th, ins, start, start + dur)
+        self.evq.push(start + dur, self._complete, th, ins.gid)
 
-        def complete():
-            g = th.wgmma_groups[ins.gid]
-            g[1] += 1
-            self.sm.wake_all()
-            self._pump(self.busy_until)
-
-        self.evq.push(start + dur, complete)
+    def _complete(self, th: WGThread, gid: int):
+        g = th.wgmma_groups[gid]
+        g[1] += 1
+        if g[2] and g[1] >= g[0]:
+            th.wgmma_out.discard(gid)
+        self.sm.notify_group(th)
+        self._pump(self.busy_until)
+        self.sm.notify_tc()
 
 
 class TMAEngine:
     """Per-SM TMA engine: descriptor setup, HW address generation with line
-    dedup, bounded in-flight lines, mbarrier signaling (§4.3)."""
+    dedup, bounded in-flight lines, mbarrier signaling (§4.3).
+
+    The line path is *batched*: each cycle's issuable lines go to the LRC in
+    one ``request_many`` call sharing a single per-job completion callback
+    (a shared counter), instead of one closure per line; finished jobs are
+    retired at completion time, so ``jobs`` only ever holds live jobs."""
 
     def __init__(self, cfg: GPUMachine, evq: EventQueue, sm, lrc, tmaps):
         self.cfg = cfg
         self.evq = evq
         self.sm = sm
+        self.eng = sm.engine
         self.lrc = lrc
         self.tmaps = tmaps
+        # frozen-config hot constants, hoisted off the issue path
+        self._lpc = cfg.tma_lines_per_cycle
+        self._cap = cfg.tma_max_inflight_lines
         self.inflight = 0
-        self.jobs: List[dict] = []
+        self.jobs: List[dict] = []    # live jobs, round-robin issue order
         self.lines_issued = 0
+        self.lines_queued = 0         # un-issued lines across all live jobs
         self._kick_scheduled = False
         self._issue_cycle = -1
         self._issued_in_cycle = 0
 
+    def _tile_lines(self, ins: Instr):
+        """Hardware address generation, cached per (map, origin): CTAs of the
+        same KV head stream identical K/V tiles (Eq. 5/6 reuse structure).
+        Caching starts on the *second* encounter so per-CTA-unique tiles
+        (Q loads, O stores) cost a set entry, not a retained line list."""
+        eng = self.sm.engine
+        key = (ins.map_id, ins.origin)
+        lines = eng.tile_cache.get(key)
+        if lines is None:
+            tm: TensorMap = self.tmaps[ins.map_id]
+            lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
+                                  dedup=self.cfg.tma_dedup)
+            seen = eng.tile_seen
+            if key in seen:
+                eng.tile_cache[key] = lines
+            else:
+                seen.add(key)
+        return lines
+
     def submit_load(self, cycle: int, th: WGThread, ins: Instr,
                     nid: int = -1):
-        tm: TensorMap = self.tmaps[ins.map_id]
-        lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
-                              dedup=self.cfg.tma_dedup)
+        lines = self._tile_lines(ins)
         # Fig. 2: non-tensor bulk requests bypass the descriptor cache and
         # TensorMap setup path -> only the common launch latency applies.
         setup = self.cfg.tma_launch_latency + (
             0 if ins.bulk else self.cfg.tma_tmap_setup_latency)
-        job = {"lines": list(lines), "left": len(lines), "th": th,
+        job = {"lines": deque(lines), "left": len(lines), "th": th,
                "sid": ins.sid, "write": False, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
-        self.evq.push(cycle + setup, lambda: self._start(job))
+        job["done"] = self._make_done(job)
+        self.evq.push(cycle + setup, self._start, job)
 
     def submit_store(self, cycle: int, th: WGThread, ins: Instr,
                      nid: int = -1):
-        tm: TensorMap = self.tmaps[ins.map_id]
-        lines = tm.tile_lines(ins.origin, self.cfg.line_bytes,
-                              dedup=self.cfg.tma_dedup)
+        lines = self._tile_lines(ins)
         g = th.tma_groups.setdefault(ins.gid, [0, 0, False])
         g[0] += 1
+        if g[2] and g[1] == g[0] - 1:
+            th.tma_out.add(ins.gid)
         # stores bypass the TensorMap setup path only when bulk (Fig. 2);
         # FA3's O store uses a TensorMap -> full setup
         setup = self.cfg.tma_launch_latency + self.cfg.tma_tmap_setup_latency
-        job = {"lines": list(lines), "left": len(lines), "th": th,
+        job = {"lines": deque(lines), "left": len(lines), "th": th,
                "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
-        self.evq.push(cycle + setup, lambda: self._start(job))
+        job["done"] = self._make_done(job)
+        self.evq.push(cycle + setup, self._start, job)
+
+    def _make_done(self, job):
+        """One shared completion callback per job — the LRC invokes it once
+        per finished line (shared counter, no per-line closures)."""
+        def done():
+            self.inflight -= 1
+            job["inflight"] -= 1
+            job["left"] -= 1
+            if job["left"] == 0:
+                self._finish(job)
+            if self.lines_queued:    # freed capacity can admit queued lines
+                now = self.eng.cycle
+                # skip when _issue would provably no-op: same cycle, per-cycle
+                # budget spent, and the carry-over kick is already scheduled
+                if (now > self._issue_cycle
+                        or self._issued_in_cycle < self._lpc
+                        or not self._kick_scheduled):
+                    self._issue(now)
+        return done
 
     def _start(self, job):
         self.jobs.append(job)
+        self.lines_queued += len(job["lines"])
         self._issue(self._now())
 
     def _now(self):
-        return self.sm.engine.cycle
+        return self.eng.cycle
 
     def _issue(self, cycle: int):
         """Issue up to tma_lines_per_cycle lines this cycle, round-robin over
@@ -183,45 +267,45 @@ class TMAEngine:
         if cycle > self._issue_cycle:
             self._issue_cycle = cycle
             self._issued_in_cycle = 0
-        issued = 0
-        self.jobs = [j for j in self.jobs if j["lines"] or j["inflight"]]
-        for job in list(self.jobs):
-            if self._issued_in_cycle >= self.cfg.tma_lines_per_cycle:
-                break
-            while (job["lines"]
-                   and self._issued_in_cycle < self.cfg.tma_lines_per_cycle
-                   and job["inflight"] < self.cfg.tma_max_inflight_lines):
-                line = job["lines"].pop(0)
-                job["inflight"] += 1
-                self.inflight += 1
-                self.lines_issued += 1
-                issued += 1
-                self._issued_in_cycle += 1
-
-                def done(job=job):
-                    self.inflight -= 1
-                    job["inflight"] -= 1
-                    job["left"] -= 1
-                    if job["left"] == 0:
-                        self._finish(job)
-                    self._issue(self._now())
-
-                self.lrc.request(cycle, line, self.sm.sm_id, done,
-                                 write=job["write"])
+        budget = self._lpc - self._issued_in_cycle
+        if budget > 0 and self.lines_queued:
+            inflight_cap = self._cap
+            for job in self.jobs:
+                if budget <= 0:
+                    break
+                lines = job["lines"]
+                take = budget
+                n = len(lines)
+                if n < take:
+                    take = n
+                room = inflight_cap - job["inflight"]
+                if room < take:
+                    take = room
+                if take <= 0:
+                    continue
+                batch = [lines.popleft() for _ in range(take)]
+                job["inflight"] += take
+                self.inflight += take
+                self.lines_issued += take
+                self.lines_queued -= take
+                self._issued_in_cycle += take
+                budget -= take
+                self.lrc.request_many(cycle, batch, self.sm.sm_id,
+                                      job["done"], write=job["write"])
         # rate-limited this cycle with lines still issuable: kick next cycle.
         # (inflight-capped jobs are re-kicked by their done() callbacks)
-        if (self._issued_in_cycle >= self.cfg.tma_lines_per_cycle
-                and any(j["lines"] and
-                        j["inflight"] < self.cfg.tma_max_inflight_lines
-                        for j in self.jobs)
-                and not self._kick_scheduled):
-            self._kick_scheduled = True
+        if (self.lines_queued and not self._kick_scheduled
+                and self._issued_in_cycle >= self._lpc):
+            cap = self._cap
+            for j in self.jobs:
+                if j["lines"] and j["inflight"] < cap:
+                    self._kick_scheduled = True
+                    self.evq.push(cycle + 1, self._kick)
+                    break
 
-            def kick():
-                self._kick_scheduled = False
-                self._issue(self._now())
-
-            self.evq.push(cycle + 1, kick)
+    def _kick(self):
+        self._kick_scheduled = False
+        self._issue(self._now())
 
     def _finish(self, job):
         th: WGThread = job["th"]
@@ -229,6 +313,8 @@ class TMAEngine:
         if job["write"]:
             g = th.tma_groups[job["gid"]]
             g[1] += 1
+            if g[2] and g[1] >= g[0]:
+                th.tma_out.discard(job["gid"])
         else:
             cta = th.cta
             cta.mbarrier[job["sid"]] = cta.mbarrier.get(job["sid"], 0) + 1
@@ -239,7 +325,11 @@ class TMAEngine:
                 t0=job["t0"], t1=self._now(), fixed=job["setup"],
                 sid=job.get("sid", -1), gid=job.get("gid", -1),
                 signal_n=signal_n)
-        self.sm.wake_all()
+        self.jobs.remove(job)
+        if job["write"]:
+            self.sm.notify_group(th)
+        else:
+            self.sm.notify_mb(th.cta, job["sid"])
 
 
 class SM:
@@ -249,7 +339,9 @@ class SM:
         self.engine = engine
         self.evq = engine.evq
         self.tracer = engine.tracer
+        self.broadcast = engine.broadcast_wake
         self.ctas: List[CTA] = []
+        self._threads: List[WGThread] = []   # flat resident non-DONE threads
         self.tc = TensorCoreEngine(cfg, self.evq, self)
         self.tma = TMAEngine(cfg, self.evq, self, engine.lrc, engine.tmaps)
         self.current: Optional[WGThread] = None   # GTO greedy pointer
@@ -257,8 +349,11 @@ class SM:
 
     # ------------------------------------------------------------------
     def threads(self):
-        for cta in self.ctas:
-            yield from cta.threads
+        return self._threads
+
+    def _rebuild_threads(self):
+        self._threads = [th for cta in self.ctas for th in cta.threads
+                         if th.state != DONE]
 
     def wake_all(self):
         self.engine.mark_active(self)
@@ -280,17 +375,17 @@ class SM:
                 return True
             return cta.stage_releases.get(ins.sid, 0) >= use * cta.n_consumers
         if op == isa.WGMMA_WAIT:
-            groups = th.wgmma_groups
-            outstanding = sum(
-                1 for g, (iss, comp, com) in groups.items()
-                if g <= ins.gid and com and comp < iss)
-            return outstanding <= ins.n
+            out = th.wgmma_out
+            if len(out) <= ins.n:       # O(1) fast path: total outstanding
+                return True
+            gid = ins.gid
+            return sum(1 for g in out if g <= gid) <= ins.n
         if op == isa.TMA_WAIT:
-            groups = th.tma_groups
-            outstanding = sum(
-                1 for g, (iss, comp, com) in groups.items()
-                if g <= ins.gid and com and comp < iss)
-            return outstanding <= ins.n
+            out = th.tma_out
+            if len(out) <= ins.n:
+                return True
+            gid = ins.gid
+            return sum(1 for g in out if g <= gid) <= ins.n
         if op == isa.BAR_WAIT:
             return cta.bar_arrivals.get(ins.bid, 0) >= ins.n
         if op == isa.WGMMA:
@@ -304,15 +399,88 @@ class SM:
             th.acq_count[ins.sid] = th.acq_count.get(ins.sid, 0) + 1
 
     # ------------------------------------------------------------------
+    # waiter index: park / targeted wake (waiter-mode scheduler)
+    def _park(self, th: WGThread, ins: Instr):
+        """Register a freshly stalled thread under its wake condition.
+        WGMMA_WAIT/TMA_WAIT drain only on this thread's own group
+        completions, so those are probed directly (no list needed)."""
+        if th.parked:
+            return
+        op = ins.op
+        if op == isa.MB_WAIT:
+            th.cta.mb_waiters.setdefault(ins.sid, []).append(th)
+        elif op == isa.ACQUIRE_STAGE:
+            th.cta.stage_waiters.setdefault(ins.sid, []).append(th)
+        elif op == isa.BAR_WAIT:
+            th.cta.bar_waiters.setdefault(ins.bid, []).append(th)
+        elif op == isa.WGMMA:
+            self.tc.waiters.append(th)
+        else:                       # WGMMA_WAIT / TMA_WAIT: probed via
+            return                  # notify_group, not list-parked
+        th.parked = True
+
+    def _drain_waiters(self, lst: List[WGThread]):
+        """Wake every parked thread whose condition now holds."""
+        woke = False
+        kept = []
+        for th in lst:
+            if self._cond_met(th, th.trace[th.pc]):
+                th.parked = False
+                th.state = READY
+                woke = True
+            else:
+                kept.append(th)
+        lst[:] = kept
+        if woke:
+            self.engine.mark_active(self)
+
+    def _notify_keyed(self, waiters: Dict[int, List[WGThread]], key: int):
+        if self.broadcast:
+            self.wake_all()
+            return
+        lst = waiters.get(key)
+        if lst:
+            self._drain_waiters(lst)
+
+    def notify_mb(self, cta: CTA, sid: int):
+        self._notify_keyed(cta.mb_waiters, sid)
+
+    def notify_stage(self, cta: CTA, sid: int):
+        self._notify_keyed(cta.stage_waiters, sid)
+
+    def notify_bar(self, cta: CTA, bid: int):
+        self._notify_keyed(cta.bar_waiters, bid)
+
+    def notify_group(self, th: WGThread):
+        """One of ``th``'s WGMMA/TMA groups completed work: re-check a
+        pending drain wait.  ``parked`` threads wait on something else."""
+        if self.broadcast:
+            self.wake_all()
+            return
+        if th.state == STALLED and not th.parked:
+            ins = th.trace[th.pc]
+            if (ins.op == isa.WGMMA_WAIT or ins.op == isa.TMA_WAIT) \
+                    and self._cond_met(th, ins):
+                th.state = READY
+                self.engine.mark_active(self)
+
+    def notify_tc(self):
+        if not self.broadcast and self.tc.waiters:
+            self._drain_waiters(self.tc.waiters)
+
+    # ------------------------------------------------------------------
     def step(self, cycle: int) -> bool:
         """Issue up to issue_width instructions. Returns True if progressed."""
         progressed = False
+        broadcast = self.broadcast
         for _ in range(self.cfg.issue_width):
             issued = False
             for th in self._candidates(cycle):
                 ins = th.trace[th.pc]
                 if not self._cond_met(th, ins):
                     th.state = STALLED   # PC rollback: do not advance
+                    if not broadcast:
+                        self._park(th, ins)
                     if self.current is th:
                         self.current = None
                     continue             # GTO: fall through to next-oldest
@@ -324,7 +492,7 @@ class SM:
                 th.pc += 1
                 self.current = th        # greedy: keep issuing this thread
                 issued = True
-                if th.done():
+                if th.pc >= th.trace_len:
                     th.state = DONE
                     self.current = None
                     # retirement waits for trailing in-flight work (bubbles)
@@ -342,13 +510,14 @@ class SM:
     def _candidates(self, cycle: int):
         """Greedy-then-oldest order: current thread first, then dispatch order."""
         cur = self.current
-        if (cur is not None and cur.state == READY and not cur.done()
-                and cur.busy_until <= cycle):
+        if (cur is not None and cur.state == READY
+                and cur.pc < cur.trace_len and cur.busy_until <= cycle):
             yield cur
-        for th in self.threads():
+        for th in self._threads:
             if th is cur:
                 continue
-            if th.state == READY and not th.done() and th.busy_until <= cycle:
+            if (th.state == READY and th.pc < th.trace_len
+                    and th.busy_until <= cycle):
                 yield th
 
     def _execute(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
@@ -362,16 +531,22 @@ class SM:
             self.tc.push(cycle, th, ins, nid)
         elif op == isa.WGMMA_COMMIT:
             g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
-            g[2] = True
+            if not g[2]:
+                g[2] = True
+                if g[1] < g[0]:
+                    th.wgmma_out.add(ins.gid)
         elif op == isa.TMA_COMMIT:
             g = th.tma_groups.setdefault(ins.gid, [0, 0, False])
-            g[2] = True
+            if not g[2]:
+                g[2] = True
+                if g[1] < g[0]:
+                    th.tma_out.add(ins.gid)
         elif op == isa.RELEASE_STAGE:
             cta.stage_releases[ins.sid] = cta.stage_releases.get(ins.sid, 0) + 1
-            self.wake_all()
+            self.notify_stage(cta, ins.sid)
         elif op == isa.BAR_ARRIVE:
             cta.bar_arrivals[ins.bid] = cta.bar_arrivals.get(ins.bid, 0) + 1
-            self.wake_all()
+            self.notify_bar(cta, ins.bid)
         elif op == isa.BUBBLES:
             th.busy_until = cycle + ins.cycles
             self.evq.push(th.busy_until, self.wake_all)
@@ -379,22 +554,26 @@ class SM:
 
     def _finish_thread(self, th: WGThread):
         th.cta.done_wgs += 1
+        self._rebuild_threads()
         if th.cta.done_wgs == len(th.cta.threads):
             self._retire_cta(th.cta)
 
     def _retire_cta(self, cta: CTA):
         self.ctas.remove(cta)
+        self._rebuild_threads()
         self.engine.cta_retired(self, cta)
 
     def all_blocked(self, cycle: int) -> bool:
-        for th in self.threads():
-            if th.state == READY and not th.done() and th.busy_until <= cycle:
+        for th in self._threads:
+            if (th.state == READY and th.pc < th.trace_len
+                    and th.busy_until <= cycle):
                 return False
         return True
 
     def unstall(self):
-        """Re-mark stalled threads READY so conditions get re-checked."""
-        for th in self.threads():
+        """Re-mark stalled threads READY so conditions get re-checked.
+        Broadcast-mode fallback only — waiter mode wakes via the index."""
+        for th in self._threads:
             if th.state == STALLED:
                 th.state = READY
 
@@ -404,7 +583,8 @@ class Engine:
 
     def __init__(self, machine: GPUMachine, n_sms: Optional[int] = None,
                  mem_scale: Optional[float] = None, record_gantt: bool = False,
-                 seed: int = 0, direct_hbm: bool = False, tracer=None):
+                 seed: int = 0, direct_hbm: bool = False, tracer=None,
+                 broadcast_wake: bool = False):
         self.cfg = machine
         self.n_sms = n_sms or machine.num_sms
         scale = mem_scale if mem_scale is not None else self.n_sms / machine.num_sms
@@ -412,14 +592,17 @@ class Engine:
         self.lrc, self.l2, self.dram = build_memory(machine, self.evq, scale,
                                                     seed, direct=direct_hbm)
         self.tmaps: Dict[int, TensorMap] = {}
+        self.tile_cache: Dict[tuple, list] = {}   # (map_id, origin) -> lines
+        self.tile_seen: set = set()               # keys seen exactly once
         if tracer is None and record_gantt:
             # gantt is now a view over the structured event trace
             from repro.analysis.events import EventTracer
             tracer = EventTracer()
         self.tracer = tracer
         self.record_gantt = tracer is not None
+        self.broadcast_wake = broadcast_wake
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
-        self.pending: List[CTATrace] = []
+        self.pending: deque = deque()
         self.cycle = 0
         self.launched = 0
         self.retired = 0
@@ -436,16 +619,20 @@ class Engine:
 
     def _dispatch(self, parent: Optional[int] = None):
         for sm in self.sms:
+            added = False
             while self.pending and sm.has_slot():
-                trace = self.pending.pop(0)
+                trace = self.pending.popleft()
                 cta = CTA(trace, self.launched)
                 self.launched += 1
                 sm.ctas.append(cta)
                 for th in cta.threads:
                     th.sm = sm
+                added = True
                 if self.tracer is not None:
                     self.tracer.on_dispatch(cta.idx, parent)
                 self.mark_active(sm)
+            if added:
+                sm._rebuild_threads()
 
     def cta_retired(self, sm: SM, cta: CTA):
         self.retired += 1
@@ -453,39 +640,51 @@ class Engine:
 
     def mark_active(self, sm: SM):
         self._active.add(sm.sm_id)
-        sm.unstall()
+        if self.broadcast_wake:
+            sm.unstall()
 
     # ------------------------------------------------------------------
     def run(self, max_cycles: int = 2_000_000_000) -> dict:
+        broadcast = self.broadcast_wake
+        active = self._active
+        sms = self.sms
+        evq = self.evq
         while self.cycle < max_cycles:
-            self.evq.pop_ready(self.cycle)
+            evq.pop_ready(self.cycle)
             if self.retired == self.launched and not self.pending:
                 break
             progressed = False
-            for sid in list(self._active):
-                sm = self.sms[sid]
-                if sm.step(self.cycle):
-                    progressed = True
-                    sm.issue_cycles += 1
-                elif sm.all_blocked(self.cycle):
-                    self._active.discard(sid)
+            if active:
+                # ascending sm id == the insertion-ordered small-int set
+                # iteration the broadcast engine always produced
+                for sid in sorted(active):
+                    sm = sms[sid]
+                    if sm.step(self.cycle):
+                        progressed = True
+                        sm.issue_cycles += 1
+                    elif sm.all_blocked(self.cycle):
+                        active.discard(sid)
             if progressed:
                 self.cycle += 1
                 continue
-            nxt = self.evq.next_cycle()
+            nxt = evq.next_cycle()
             if nxt is None:
                 # threads may be waiting on busy_until (bubbles) -- find min
-                wake = [th.busy_until for sm in self.sms for th in sm.threads()
+                wake = [th.busy_until for sm in sms for th in sm.threads()
                         if th.state == READY and not th.done()
                         and th.busy_until > self.cycle]
                 if not wake:
                     self.deadlocked = self.retired < self.launched
                     break
                 self.cycle = min(wake)
+                for sm in sms:
+                    self.mark_active(sm)
             else:
                 self.cycle = max(self.cycle + 1, nxt)
-            for sm in self.sms:
-                self.mark_active(sm)
+                if broadcast:
+                    # legacy rescan: re-mark every SM after each time jump
+                    for sm in sms:
+                        self.mark_active(sm)
         return self.stats()
 
     # ------------------------------------------------------------------

@@ -20,6 +20,7 @@ from __future__ import annotations
 import heapq
 import random
 from collections import OrderedDict, defaultdict, deque
+from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.machine import GPUMachine
@@ -32,15 +33,18 @@ class EventQueue:
         self._h: List = []
         self._seq = 0
         self.now = 0            # cycle of the event currently executing
+        self.popped = 0         # total events executed (sim throughput stat)
 
     def push(self, cycle: int, fn: Callable, *args):
         heapq.heappush(self._h, (cycle, self._seq, fn, args))
         self._seq += 1
 
     def pop_ready(self, cycle: int):
-        while self._h and self._h[0][0] <= cycle:
-            t, _, fn, args = heapq.heappop(self._h)
+        h = self._h
+        while h and h[0][0] <= cycle:
+            t, _, fn, args = heapq.heappop(h)
             self.now = t
+            self.popped += 1
             fn(*args)
 
     def next_cycle(self) -> Optional[int]:
@@ -223,21 +227,33 @@ class LRC:
 
     def request(self, cycle: int, line_addr: int, sm_id: int, cb: Callable,
                 write: bool = False):
+        self.request_many(cycle, (line_addr,), sm_id, cb, write)
+
+    def request_many(self, cycle: int, lines, sm_id: int, cb: Callable,
+                     write: bool = False):
+        """Batch entry point: one call per TMA issue cycle, one shared ``cb``
+        invoked once per completed line (the engine's per-job counter)."""
         if not self.cfg.lrc_enabled or write:
-            self.l2.access(cycle, line_addr, sm_id, cb, write)
+            l2 = self.l2
+            for line_addr in lines:
+                l2.access(cycle, line_addr, sm_id, cb, write)
             return
-        key = (sm_id // 2, line_addr)
-        if key in self.pending:
-            self.merged += 1
-            self.pending[key].append(cb)
-            return
-        self.pending[key] = [cb]
+        pending = self.pending
+        pair = sm_id // 2
+        for line_addr in lines:
+            key = (pair, line_addr)
+            waiters = pending.get(key)
+            if waiters is not None:
+                self.merged += 1
+                waiters.append(cb)
+                continue
+            pending[key] = [cb]
+            self.l2.access(cycle, line_addr, sm_id,
+                           partial(self._fanout, key))
 
-        def done():
-            for w in self.pending.pop(key, []):
-                w()
-
-        self.l2.access(cycle, line_addr, sm_id, done)
+    def _fanout(self, key):
+        for w in self.pending.pop(key, ()):
+            w()
 
 
 class DirectHBM:
@@ -255,6 +271,13 @@ class DirectHBM:
                 write: bool = False):
         self.requests += 1
         self.dram.access(cycle, line_addr, cb)
+
+    def request_many(self, cycle: int, lines, sm_id: int, cb: Callable,
+                     write: bool = False):
+        self.requests += len(lines)
+        dram = self.dram
+        for line_addr in lines:
+            dram.access(cycle, line_addr, cb)
 
     def stats(self):
         return {"requests": self.requests, "hits": 0, "misses": self.requests,

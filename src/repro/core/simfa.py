@@ -45,9 +45,10 @@ class SimResult:
                                      # (first) simulated engine run
 
 
-def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False):
+def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
+         engine_opts=None):
     eng = Engine(cfg, n_sms=n_sms, mem_scale=mem_scale,
-                 record_gantt=record_gantt)
+                 record_gantt=record_gantt, **(engine_opts or {}))
     for tm in tmaps.values():
         eng.define_tmap(tm)
     eng.launch(ctas)
@@ -58,7 +59,8 @@ def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False):
 def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
                  tiling: FA3Tiling = FA3Tiling(), fidelity: str = "auto",
                  n_sub: int = 8, record_gantt: bool = False,
-                 record_events: bool = False) -> SimResult:
+                 record_events: bool = False,
+                 engine_opts: Optional[dict] = None) -> SimResult:
     # total CTA count is analytic; only the traces we will actually run are
     # materialized (hierarchical mode simulates the first two waves only)
     total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
@@ -71,7 +73,8 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     record = record_gantt or record_events
 
     if fidelity == "full":
-        eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record)
+        eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record,
+                       engine_opts)
         return SimResult(
             latency_us=st["time_us"], cycles=st["cycles"], fidelity="full",
             n_ctas_total=total, n_ctas_simulated=total,
@@ -88,9 +91,10 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     scale = n_sub / cfg.num_sms
     one = ctas[:per_wave_sub]
     two = ctas[:2 * per_wave_sub]
-    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record)
+    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record, engine_opts)
     if len(two) > len(one):
-        eng2, st2 = _run(cfg, two, tmaps, n_sub, scale)
+        eng2, st2 = _run(cfg, two, tmaps, n_sub, scale,
+                         engine_opts=engine_opts)
         marginal = max(st2["cycles"] - st1["cycles"], 1)
     else:
         eng2, st2 = eng1, st1

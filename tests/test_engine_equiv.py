@@ -1,0 +1,136 @@
+"""Waiter-indexed scheduler vs. broadcast-fallback equivalence (PR 4).
+
+The cycle engine schedules with condition-indexed waiter lists; the legacy
+broadcast scheduler (wake-everything-and-rescan) survives behind
+``Engine(broadcast_wake=True)`` as a deadlock-safety fallback.  Both must be
+*bit-exact*: identical ``Engine.stats()`` dicts and identical
+:class:`EventTracer` event streams, across a grid of workload/machine
+configs, including a deadlock case (both flag ``deadlocked``, neither hangs).
+
+The GOLD values double as a regression anchor: ``cycles``, ``dram_bytes``,
+``l2_req_bytes`` and ``tma_lines`` were captured from the pre-refactor
+broadcast engine on this grid and must never drift.
+"""
+import pytest
+
+from repro.core import isa
+from repro.core.engine import CTATrace, Engine
+from repro.core.isa import Instr
+from repro.core.machine import H800, h800_variant
+from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
+from repro.analysis.events import EventTracer
+
+# name -> (machine, n_sms, workload kwargs)
+CONFIGS = {
+    "tiny": (H800, 2,
+             dict(B=1, L=128, S=256, H_kv=1, G=1, D=64,
+                  tiling=FA3Tiling(t_m=64, t_n=128, stages=2))),
+    "small": (H800, 4, dict(B=1, L=256, S=512, H_kv=1, G=2, D=128)),
+    "causal": (h800_variant(tma_max_inflight_lines=8, lrc_enabled=False), 2,
+               dict(B=1, L=256, S=512, H_kv=1, G=1, D=128, causal=True)),
+    "nox": (h800_variant(xor_hash=False, remote_copy=False), 3,
+            dict(B=1, L=192, S=384, H_kv=1, G=1, D=64,
+                 tiling=FA3Tiling(t_m=64, t_n=96, stages=3))),
+}
+
+# pre-refactor broadcast-engine reference values (see module docstring)
+GOLD = {
+    "tiny": {"cycles": 8666, "dram_bytes": 98304, "l2_req_bytes": 114688,
+             "tma_lines": 1408, "tc_busy_cycles": 4096, "events": 328},
+    "small": {"cycles": 26421, "dram_bytes": 524288, "l2_req_bytes": 962688,
+              "tma_lines": 19968, "tc_busy_cycles": 67584, "events": 2592},
+    "causal": {"cycles": 60209, "dram_bytes": 311296, "l2_req_bytes": 737280,
+               "tma_lines": 5760, "tc_busy_cycles": 16896, "events": 672},
+    "nox": {"cycles": 9805, "dram_bytes": 147456, "l2_req_bytes": 172032,
+            "tma_lines": 2880, "tc_busy_cycles": 9216, "events": 852},
+}
+
+
+def _run(name, broadcast):
+    cfg, n_sms, kw = CONFIGS[name]
+    kw = dict(kw)
+    tiling = kw.pop("tiling", FA3Tiling())
+    causal = kw.pop("causal", False)
+    ctas, tmaps = fa3_kernel_ctas(cfg, tiling=tiling, causal=causal, **kw)
+    tracer = EventTracer()
+    eng = Engine(cfg, n_sms=n_sms, mem_scale=n_sms / cfg.num_sms,
+                 tracer=tracer, broadcast_wake=broadcast)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    events = [(e.eid, e.kind, e.op, e.sm, e.cta, e.wg, e.tag, e.t0, e.t1,
+               e.t_done, e.sid, e.gid, e.bid, e.dep_n, e.fixed, e.src)
+              for e in tracer.events]
+    return eng, st, events
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_waiter_equals_broadcast(name):
+    """Both schedulers: identical stats dicts and identical event streams."""
+    eng_w, st_w, ev_w = _run(name, broadcast=False)
+    eng_b, st_b, ev_b = _run(name, broadcast=True)
+    assert st_w == st_b
+    assert ev_w == ev_b
+    assert eng_w.deadlocked == eng_b.deadlocked is False
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_stats_match_pre_refactor_gold(name):
+    _, st, ev = _run(name, broadcast=False)
+    gold = GOLD[name]
+    got = {k: st[k] for k in ("cycles", "dram_bytes", "l2_req_bytes",
+                              "tma_lines", "tc_busy_cycles")}
+    got["events"] = len(ev)
+    assert got == gold
+
+
+def test_deadlock_flagged_identically():
+    """An un-signaled mbarrier wait must deadlock-flag in both modes, and
+    terminate immediately (no hang, no cycle burn)."""
+    for broadcast in (False, True):
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+        eng.launch([CTATrace(wgs=[[Instr(isa.MB_WAIT, sid=7)]],
+                             n_consumers=1)])
+        st = eng.run()
+        assert eng.deadlocked
+        assert st["cycles"] == 0
+
+
+def test_deadlock_after_progress():
+    """Deadlock reached mid-pipeline (producer waits on a stage no consumer
+    releases): both modes agree on the flag and on the cycle it is hit."""
+    results = {}
+    for broadcast in (False, True):
+        prod = [Instr(isa.BUBBLES, cycles=100),
+                Instr(isa.ACQUIRE_STAGE, sid=0),
+                Instr(isa.ACQUIRE_STAGE, sid=0)]   # second acquire: no release
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+        eng.launch([CTATrace(wgs=[prod], n_consumers=1)])
+        st = eng.run()
+        results[broadcast] = (eng.deadlocked, st["cycles"])
+    assert results[False] == results[True]
+    assert results[False][0] is True
+
+
+def test_group_wait_counters_track_dict_bookkeeping():
+    """The O(1) outstanding-group sets must reproduce the old full-dict scan,
+    including the ``g <= gid`` filter: a committed group with a *higher* id
+    than the wait's gid must not block it (out-of-order gid commit)."""
+    results = {}
+    for broadcast in (False, True):
+        tr = []
+        # commit high group first, then a low one; wait only on the low id
+        for gid in (5, 1):
+            for _ in range(3):
+                tr.append(Instr(isa.WGMMA, gid=gid, m=64, n=128, k=16))
+            tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+        tr.append(Instr(isa.WGMMA_WAIT, gid=1, n=0))   # ignores group 5
+        tr.append(Instr(isa.WGMMA_WAIT, gid=5, n=0))   # drain everything
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+        eng.launch([CTATrace(wgs=[tr], n_consumers=1)])
+        st = eng.run()
+        assert not eng.deadlocked
+        assert st["tc_busy_cycles"] == 6 * 64
+        results[broadcast] = st
+    assert results[False] == results[True]
