@@ -54,12 +54,12 @@ def run(sink: Sink):
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(chart + "\n")
 
-    # structural checks
-    tma_prod = _intervals(gantt, "tma:cta0/wg0")
-    mma_c1 = _intervals(gantt, "mma:cta0/wg1")
-    mma_c2 = _intervals(gantt, "mma:cta0/wg2")
-    bub_c1 = _intervals(gantt, "bubble:cta0/wg1")
-    bub_c2 = _intervals(gantt, "bubble:cta0/wg2")
+    # structural checks (lanes keyed by the kernel IR's declared roles)
+    tma_prod = _intervals(gantt, "tma:cta0/producer")
+    mma_c1 = _intervals(gantt, "mma:cta0/consumer0")
+    mma_c2 = _intervals(gantt, "mma:cta0/consumer1")
+    bub_c1 = _intervals(gantt, "bubble:cta0/consumer0")
+    bub_c2 = _intervals(gantt, "bubble:cta0/consumer1")
 
     ov_tma_mma = _overlap(tma_prod, mma_c1 + mma_c2)
     ov_pingpong = _overlap(bub_c1, mma_c2) + _overlap(bub_c2, mma_c1)

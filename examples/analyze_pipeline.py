@@ -23,7 +23,8 @@ from repro.analysis import critical_path as cp
 from repro.analysis import dag as dag_mod
 from repro.analysis import report, whatif
 from repro.analysis.sweep import SweepPoint, knob_grid, run_sweep
-from repro.configs.llama3 import workload
+from repro.configs.llama3 import FAMILY, AttnWorkload, workload
+from repro.core.kprog import registry as kernel_registry
 from repro.core.machine import H800
 from repro.core.simfa import simulate_fa3
 
@@ -38,6 +39,10 @@ def _parse_knob(spec: str):
 def main():
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--model", default="8B", choices=("8B", "70B", "405B"))
+    ap.add_argument("--kernel", default="fa3",
+                    choices=kernel_registry.available(),
+                    help="registered kernel program to analyze "
+                         "(splitkv_decode forces a decode-shaped workload)")
     ap.add_argument("--seqlen", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--causal", action="store_true")
@@ -54,9 +59,19 @@ def main():
     ap.add_argument("--json", default="", help="dump results to this path")
     args = ap.parse_args()
 
-    w = workload(args.model, args.seqlen, batch=args.batch, causal=args.causal)
-    print(f"simulating {w.name} on {H800.name} (fidelity={args.fidelity}) ...")
-    res = simulate_fa3(w, H800, fidelity=args.fidelity, record_events=True)
+    if args.kernel == "splitkv_decode":
+        # decode shape: one new token per sequence against a resident cache
+        f = FAMILY[args.model]
+        w = AttnWorkload(name=f"llama3-{args.model}-decode-s{args.seqlen}",
+                         B=args.batch, L=1, S=args.seqlen,
+                         H_kv=f["H_kv"], G=f["G"], D=f["D"])
+    else:
+        w = workload(args.model, args.seqlen, batch=args.batch,
+                     causal=args.causal)
+    print(f"simulating {w.name} ({args.kernel}) on {H800.name} "
+          f"(fidelity={args.fidelity}) ...")
+    res = simulate_fa3(w, H800, fidelity=args.fidelity, record_events=True,
+                       kernel=args.kernel)
     print(f"  {res.cycles:.0f} cycles = {res.latency_us:.1f} us "
           f"({res.fidelity}, {len(res.trace.events)} events)\n")
 
@@ -64,6 +79,13 @@ def main():
 
     rep = cp.attribute_stalls(dag)
     print(report.render_stall_report(rep, top=args.top))
+    print()
+    print("per-role totals (declared warpgroup roles):")
+    for role, buckets in sorted(rep.by_role().items()):
+        parts = ", ".join(f"{k}={v}" for k, v in sorted(buckets.items())
+                          if v and k not in ("busy", "idle"))
+        print(f"  {role:12s} busy={buckets['busy']} idle={buckets['idle']}"
+              + (f"  ({parts})" if parts else ""))
     print()
 
     path = cp.critical_path(dag)
@@ -77,7 +99,8 @@ def main():
     grid = knob_grid(**knob_axes)
     if len(grid) > 1 or not grid[0].is_baseline():
         rows = run_sweep([SweepPoint(workload=w, machine=H800,
-                                     fidelity=args.fidelity)],
+                                     fidelity=args.fidelity,
+                                     kernel=args.kernel)],
                          grid, processes=1)
         print(report.render_whatif_table(rows))
     else:
@@ -86,7 +109,7 @@ def main():
 
     if args.json:
         report.save_json(args.json, {
-            "workload": w.name, "cycles": res.cycles,
+            "workload": w.name, "kernel": args.kernel, "cycles": res.cycles,
             "stalls": {"per_wg": rep.per_wg, "meta": rep.meta,
                        "totals": rep.totals()},
             "critical_path_summary": summary,

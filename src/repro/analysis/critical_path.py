@@ -104,6 +104,17 @@ def _release_to(dag: PipelineDAG, eid: int, succ: int) -> int:
 # stall attribution
 # ---------------------------------------------------------------------------
 
+def role_of(label: str) -> str:
+    """Declared role behind a warpgroup label: ``cta3/consumer1`` ->
+    ``consumer``.  Labels carry the kernel IR's role-instance names
+    (``producer``, ``consumer0``, ...; positional ``wg0`` only for traces
+    built outside the IR); the cta prefix and instance index are stripped
+    so buckets aggregate per declared role."""
+    role = label.rsplit("/", 1)[-1]
+    stripped = role.rstrip("0123456789")
+    return stripped if stripped else role
+
+
 @dataclass
 class StallReport:
     per_wg: Dict[str, Dict[str, int]]       # label -> bucket -> cycles
@@ -116,6 +127,18 @@ class StallReport:
             for k, v in b.items():
                 tot[k] += v
         return dict(tot)
+
+    def by_role(self) -> Dict[str, Dict[str, int]]:
+        """Buckets summed over every warpgroup of each declared role —
+        the cross-CTA view keyed by the kernel spec's role names."""
+        out: Dict[str, Dict[str, int]] = {}
+        for label, buckets in self.per_wg.items():
+            acc = out.setdefault(role_of(label), defaultdict(int))
+            for k, v in buckets.items():
+                acc[k] += v
+            acc["idle"] += self.meta[label]["idle"]
+            acc["busy"] += self.meta[label]["busy"]
+        return {r: dict(b) for r, b in out.items()}
 
 
 def _chain_bubble_cycles(dag: PipelineDAG, eid: int, lo: int, hi: int) -> int:

@@ -51,7 +51,8 @@ class PipeEvent:
     sm: int
     cta: int                   # global CTA launch index
     wg: int                    # warpgroup id within the CTA
-    label: str                 # "cta{idx}/wg{id}"
+    label: str                 # "cta{idx}/{role}", e.g. "cta0/consumer1"
+                               # ("cta{idx}/wg{id}" for role-less traces)
     tag: str = ""
     t0: int = 0                # start (issue cycle / engine start)
     t1: int = 0                # end of lane/engine occupancy

@@ -32,11 +32,12 @@ class SweepPoint:
     machine: object             # GPUMachine (frozen dataclass, picklable)
     fidelity: str = "auto"
     n_sub: int = 8
+    kernel: str = "fa3"         # registered kernel program name
 
 
 def _key(point: SweepPoint, grid: Sequence[Knobs]) -> str:
     blob = json.dumps([asdict(point.workload), asdict(point.machine),
-                       point.fidelity, point.n_sub,
+                       point.fidelity, point.n_sub, point.kernel,
                        [asdict(k) for k in grid]], sort_keys=True)
     return hashlib.md5(blob.encode()).hexdigest()[:16]
 
@@ -50,7 +51,8 @@ def _sweep_one(args) -> List[Dict]:
 
     t0 = time.perf_counter()
     base = simulate_fa3(point.workload, point.machine, fidelity=point.fidelity,
-                        n_sub=point.n_sub, record_events=True)
+                        n_sub=point.n_sub, record_events=True,
+                        kernel=point.kernel)
     sim_s = time.perf_counter() - t0
     dag = dag_mod.build(base.trace.events, base.trace.dispatch_parent)
     rows = []
@@ -61,6 +63,7 @@ def _sweep_one(args) -> List[Dict]:
         rows.append({
             "workload": point.workload.name,
             "machine": point.machine.name,
+            "kernel": point.kernel,
             "fidelity": base.fidelity,
             "knobs": asdict(knobs),
             "knobs_label": knobs.label(),

@@ -8,9 +8,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 from repro.configs.llama3 import AttnWorkload
+from repro.core.kprog import registry as kernel_registry
+from repro.core.kprog.costs import DEFAULT_T_N
 from repro.core.machine import GPUMachine
 
 
@@ -84,18 +86,32 @@ def dram_real(w: AttnWorkload, t_m: int, n_sm: int, o_limit: int) -> float:
 
 
 def analyze(w: AttnWorkload, cfg: GPUMachine, *, t_m: int = 64,
+            t_n: Optional[int] = None, tiling=None,
+            kernel: Union[str, "object"] = "fa3",
             l2_effective_fraction: float = 0.5,
             l2_bw_bytes_per_s: Optional[float] = None) -> TrafficReport:
     """Full SimFA-python report for one attention kernel invocation.
 
-    l2_effective_fraction=0.5 follows §6.2.2: half the nominal L2 is used as
-    the effective boundary on partitioned-L2 parts (H800).
+    The traffic terms go through the registered kernel's hooks so Eq. 2/6
+    specialize per scenario (``kernel="fa3"`` reproduces the paper's
+    closed forms above exactly).  Pass the same ``tiling`` the simulation
+    used and the hooks (and the ``t_m``/``t_n`` the ramp term charges)
+    follow it; otherwise the kernel's default tiling applies (paper
+    reference 64x176 for FA3).  l2_effective_fraction=0.5 follows §6.2.2:
+    half the nominal L2 is used as the effective boundary on
+    partitioned-L2 parts (H800).
     """
-    fl = total_flops(w)
-    l2b = l2_traffic(w, t_m)
-    ideal_b = dram_ideal(w)
+    spec = kernel_registry.get(kernel)
+    if tiling is not None:
+        t_m = getattr(tiling, "t_m", t_m)
+        if t_n is None:
+            t_n = getattr(tiling, "t_n", None)
+    fl = spec.flops(w)
+    l2b = spec.l2_traffic(w, t_m, tiling=tiling)
+    ideal_b = spec.dram_ideal(w)
     wgrp = waves_per_group(w, t_m, cfg.num_sms, cfg.occupancy_limit)
-    real_b = dram_real(w, t_m, cfg.num_sms, cfg.occupancy_limit)
+    real_b = spec.dram_real(w, t_m, cfg.num_sms, cfg.occupancy_limit,
+                            tiling=tiling)
     ideal = ideal_condition(w, cfg.l2_bytes * l2_effective_fraction)
     dram_b = ideal_b if ideal else real_b
 
@@ -116,12 +132,12 @@ def analyze(w: AttnWorkload, cfg: GPUMachine, *, t_m: int = 64,
     t_d = dram_b / (cfg.dram_bw_gbps * 1e9)
 
     # fill/drain: TMA setup + memory round trip for the first K tile, plus
-    # two (softmax + MMA) stages before/after steady state (t_n=176 default)
-    t_n = 176
-    bubble = (math.ceil(t_m * t_n / cfg.fp32_ops_per_cycle) * 2
-              + math.ceil(t_m * t_n / cfg.mufu_ops_per_cycle)
-              + math.ceil(t_m * t_n / cfg.fp16_ops_per_cycle)
-              + math.ceil(t_m * w.D / cfg.fp16_ops_per_cycle))
+    # two (softmax + MMA) stages before/after steady state; the bubble is
+    # the same §5.2 cost the trace generators charge (shared in
+    # kprog.costs), shaped by the dispatched kernel at the tiling's t_n
+    if t_n is None:
+        t_n = getattr(spec.default_tiling(), "t_n", DEFAULT_T_N)
+    bubble = spec.ramp_bubble_cycles(cfg, w, t_m, t_n)
     mma = (w.D // 16) * max(1, int(t_n / cfg.wgmma_n_cycles_divisor)) / 8
     ramp_cycles = (cfg.tma_launch_latency + cfg.tma_tmap_setup_latency
                    + cfg.l2_near_latency + cfg.dram_latency

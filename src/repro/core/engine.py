@@ -46,10 +46,16 @@ READY, STALLED, DONE = 0, 1, 2
 
 @dataclass
 class CTATrace:
-    """One thread block: a list of WarpGroup instruction traces."""
+    """One thread block: a list of WarpGroup instruction traces.
+
+    ``roles`` optionally names each warpgroup's declared role instance
+    (e.g. ``["producer", "consumer0", "consumer1"]``, from the kernel IR);
+    thread labels — and therefore stall-attribution keys — use these names
+    instead of positional ``wg{i}`` indices when present."""
     wgs: List[List[Instr]]
     n_consumers: int = 2
     name: str = ""
+    roles: Optional[List[str]] = None
 
 
 class WGThread:
@@ -92,8 +98,10 @@ class CTA:
         self.idx = idx
         self.n_consumers = trace.n_consumers
         self.threads = [WGThread(t, self, i) for i, t in enumerate(trace.wgs)]
+        roles = trace.roles
         for i, t in enumerate(self.threads):
-            t.label = f"cta{idx}/wg{i}"
+            role = roles[i] if roles and i < len(roles) else f"wg{i}"
+            t.label = f"cta{idx}/{role}"
         self.mbarrier: Dict[int, int] = {}        # sid -> completed signals
         self.stage_releases: Dict[int, int] = {}  # sid -> consumer releases
         self.bar_arrivals: Dict[int, int] = {}    # bid -> arrivals

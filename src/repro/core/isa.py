@@ -25,6 +25,14 @@ BAR_ARRIVE = "BAR_ARRIVE"          # named barrier non-blocking signal
 BAR_WAIT = "BAR_WAIT"              # block until >=k arrives
 BUBBLES = "BUBBLES"                # CUDA-core work (softmax etc.)
 
+# Well-known operand values shared by the trace generators and engine-side
+# tooling.  Point-to-point tokens (e.g. "Q tile ready") use mbarrier sids
+# allocated upward from Q_READY_SID, far above the ring-buffer stage sids
+# (allocated upward from 0), so the two namespaces cannot collide; epilogue
+# TMA store groups use EPILOGUE_GID, far above any WGMMA commit-group id.
+Q_READY_SID = 98                   # first point-to-point token sid
+EPILOGUE_GID = 99                  # epilogue TMA store commit group
+
 
 @dataclass(frozen=True)
 class TensorMap:

@@ -1,0 +1,12 @@
+"""Kernel-program IR: declarative warp-specialization layer + registry.
+
+``repro.core.kprog.ir`` defines the IR (roles, rings, named tokens) and the
+``KernelSpec.build()`` lowering to engine traces; ``registry`` maps kernel
+names to registered specs (``fa3``, ``fa3_cooperative``, ``fa2``,
+``splitkv_decode``).  See docs/kernels.md.
+"""
+from repro.core.kprog.ir import CTABuilder, KernelSpec, Ring, Role, WGProgram
+from repro.core.kprog.registry import available, get, register
+
+__all__ = ["CTABuilder", "KernelSpec", "Ring", "Role", "WGProgram",
+           "available", "get", "register"]

@@ -1,0 +1,50 @@
+"""Kernel registry: name -> KernelSpec.
+
+Built-in specs (fa3, fa3_cooperative, fa2, splitkv_decode) self-register on
+first lookup; external code can register additional specs with
+:func:`register` before driving them through ``simulate_fa3(kernel=...)``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+from repro.core.kprog.ir import KernelSpec
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+_BUILTINS_LOADED = False
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    # imports self-register; deferred so repro.core.analytical (imported by
+    # the spec modules) never cycles at module-import time.  The flag flips
+    # only on success so a failed import surfaces again on the next lookup
+    # instead of leaving a silently empty registry.
+    from repro.core.kprog import decode, fa2, fa3  # noqa: F401
+    _BUILTINS_LOADED = True
+
+
+def get(kernel: Union[str, KernelSpec]) -> KernelSpec:
+    """Resolve a kernel name (or pass a spec through)."""
+    if isinstance(kernel, KernelSpec):
+        return kernel
+    _ensure_builtins()
+    try:
+        return _REGISTRY[kernel]
+    except KeyError:
+        raise KeyError(f"unknown kernel {kernel!r}; "
+                       f"available: {sorted(_REGISTRY)}") from None
+
+
+def available() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)

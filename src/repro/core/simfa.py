@@ -1,4 +1,10 @@
-"""High-level Sim-FA driver: simulate one FlashAttention-3 kernel launch.
+"""High-level Sim-FA driver: simulate one attention-kernel launch.
+
+The kernel program is resolved through the kernel registry
+(``repro.core.kprog``): ``kernel="fa3"`` (default, the paper's ping-pong
+FA3), ``"fa3_cooperative"``, ``"fa2"`` (non-specialized ablation baseline)
+or ``"splitkv_decode"`` (FlashDecoding-style serving workload) — or any
+externally registered :class:`~repro.core.kprog.ir.KernelSpec`.
 
 Fidelity modes (§2.3: cycle simulation is prohibitively slow on large
 workloads, so a corrected analytical model substitutes — we make the
@@ -13,15 +19,15 @@ substitution structured instead of ad hoc):
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 from repro.configs.llama3 import AttnWorkload
 from repro.core import analytical
 from repro.core.engine import Engine
+from repro.core.kprog import registry as kernel_registry
+from repro.core.kprog.ir import KernelSpec
 from repro.core.machine import GPUMachine
-from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
 
 FULL_CTA_LIMIT = 600
 
@@ -40,6 +46,7 @@ class SimResult:
     dram_bytes: float          # extrapolated DRAM traffic
     l2_stats: dict
     deadlocked: bool
+    kernel: str = "fa3"
     gantt: Optional[list] = None
     trace: Optional[object] = None   # analysis.events.EventTracer of the
                                      # (first) simulated engine run
@@ -57,19 +64,25 @@ def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
 
 
 def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
-                 tiling: FA3Tiling = FA3Tiling(), fidelity: str = "auto",
+                 tiling=None, fidelity: str = "auto",
                  n_sub: int = 8, record_gantt: bool = False,
                  record_events: bool = False,
-                 engine_opts: Optional[dict] = None) -> SimResult:
+                 engine_opts: Optional[dict] = None,
+                 kernel: Union[str, KernelSpec] = "fa3") -> SimResult:
+    """Simulate one kernel launch (name kept for history; ``kernel=``
+    dispatches through the registry, defaulting to the FA3 ping-pong the
+    driver originally hardcoded).  ``tiling=None`` takes the spec's
+    default tiling."""
+    spec = kernel_registry.get(kernel)
+    tiling = tiling if tiling is not None else spec.default_tiling()
     # total CTA count is analytic; only the traces we will actually run are
     # materialized (hierarchical mode simulates the first two waves only)
-    total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
+    total = spec.total_ctas(w, tiling)
     if fidelity == "auto":
         fidelity = "full" if total <= FULL_CTA_LIMIT else "hierarchical"
     need = total if fidelity == "full" else 2 * n_sub * cfg.occupancy_limit
-    ctas, tmaps = fa3_kernel_ctas(
-        cfg, B=w.B, H_kv=w.H_kv, G=w.G, L=w.L, S=w.S, D=w.D, tiling=tiling,
-        causal=w.causal, max_ctas=min(total, need))
+    ctas, tmaps = spec.build(cfg, w, tiling=tiling,
+                             max_ctas=min(total, need))
     record = record_gantt or record_events
 
     if fidelity == "full":
@@ -82,7 +95,7 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
             l2_bytes=st["tma_lines"] * cfg.line_bytes,
             l2_delivered_bytes=st["l2_req_bytes"],
             dram_bytes=st["dram_bytes"], l2_stats=st["l2"],
-            deadlocked=eng.deadlocked,
+            deadlocked=eng.deadlocked, kernel=spec.name,
             gantt=eng.gantt() if record_gantt else None,
             trace=eng.tracer if record_events else None)
 
@@ -114,18 +127,29 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         l2_delivered_bytes=st2["l2_req_bytes"] * traf_scale,
         dram_bytes=st2["dram_bytes"] * traf_scale,
         l2_stats=st2["l2"], deadlocked=eng1.deadlocked or eng2.deadlocked,
+        kernel=spec.name,
         gantt=eng1.gantt() if record_gantt else None,
         trace=eng1.tracer if record_events else None)
 
 
+# preferred, kernel-neutral name
+simulate = simulate_fa3
+
+
 def validate_against_analytical(w: AttnWorkload, cfg: GPUMachine,
+                                kernel: Union[str, KernelSpec] = "fa3",
                                 **kw) -> dict:
-    """Fig.-6 style row: simulated vs analytical latency + traffic."""
-    sim = simulate_fa3(w, cfg, **kw)
-    rep = analytical.analyze(w, cfg)
+    """Fig.-6 style row: simulated vs analytical latency + traffic, with
+    the analytical side driven through the same kernel's traffic hooks."""
+    spec = kernel_registry.get(kernel)
+    sim = simulate_fa3(w, cfg, kernel=spec, **kw)
+    tiling = kw.get("tiling")
+    tiling = tiling if tiling is not None else spec.default_tiling()
+    rep = analytical.analyze(w, cfg, kernel=spec, tiling=tiling)
     ape = abs(sim.latency_us - rep.latency * 1e6) / max(rep.latency * 1e6, 1e-9)
     return {
         "workload": w.name,
+        "kernel": spec.name,
         "sim_us": sim.latency_us,
         "analytical_us": rep.latency * 1e6,
         "ape": ape,

@@ -1,177 +1,46 @@
-"""FA3 trace generation (paper §5.1-§5.2, Table 4).
+"""FA3 trace generation — compatibility front end over the kernel IR.
 
-Reproduces the offline trace translation: one producer WarpGroup + two
-consumer WarpGroups per CTA with ping-pong scheduling. Each GEMM issue
-expands into D/16 (QK) resp. ceil(T_N/16) (PV) WGMMA instructions sharing a
-group id; softmax/rowmax/rowsum/convert/rescale become a bubble block whose
-cycle count follows the §5.2 throughput arithmetic (988 cycles at
-T_M=64, T_N=176, D=128).
-
-Having no H800 to instrument, the "runtime log" phase is replaced by a
-schedule-exact generator that walks the same loop structure as the FA3
-kernel — the translation rules from events to instructions are the paper's.
+The hardcoded generator this module used to contain now lives as the
+registered ``fa3`` ping-pong :class:`~repro.core.kprog.ir.KernelSpec`
+(``repro.core.kprog.fa3``); lowering through the IR is instruction-for-
+instruction identical (``tests/test_kprog.py``), so the public helpers here
+keep their historical signatures for the benchmarks and tests that import
+them.  New code should go through ``repro.core.kprog`` / the kernel
+registry instead.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from types import SimpleNamespace
+from typing import Dict, List, Optional, Tuple
 
-from repro.core import isa
 from repro.core.engine import CTATrace
-from repro.core.isa import Instr, TensorMap
+from repro.core.isa import TensorMap
+from repro.core.kprog.costs import softmax_bubble_cycles  # noqa: F401
+from repro.core.kprog.fa3 import (TM_K, TM_O, TM_Q, TM_V,  # noqa: F401
+                                  FA3_SPEC, FA3Tiling, make_tmaps)
 from repro.core.machine import GPUMachine
 
-
-@dataclass(frozen=True)
-class FA3Tiling:
-    t_m: int = 64          # query rows per CTA (per paper §5.2)
-    t_n: int = 176         # kv tile rows
-    stages: int = 2        # ring-buffer stages for K and V each
-    precision: int = 2     # fp16
-
-
-def softmax_bubble_cycles(cfg: GPUMachine, t_m: int, t_n: int, d: int) -> int:
-    """§5.2 bubble arithmetic for one (T_M x T_N) tile per consumer WG."""
-    elems = t_m * t_n
-    rowmax = math.ceil(elems / cfg.fp32_ops_per_cycle)        # 88 @ 64x176
-    expo = math.ceil(elems / cfg.mufu_ops_per_cycle)          # 704
-    rowsum = math.ceil(elems / cfg.fp32_ops_per_cycle)        # 88
-    cvt = math.ceil(elems / cfg.fp16_ops_per_cycle)           # 44
-    rescale = math.ceil(t_m * d / cfg.fp16_ops_per_cycle)     # 64
-    return rowmax + expo + rowsum + cvt + rescale             # = 988
-
-
-# tensor-map ids
-TM_Q, TM_K, TM_V, TM_O = 0, 1, 2, 3
-
-
-def make_tmaps(B: int, L: int, S: int, H_q: int, H_kv: int, D: int,
-               tiling: FA3Tiling, base: int = 0) -> Dict[int, TensorMap]:
-    """Layouts follow the FA3 kernel's (B, S, H, D) tensors: consecutive
-    sequence rows of one head are H*D*P bytes apart — the 2048-byte strides
-    that concentrate requests on L2 slices under a naive low-bit hash
-    (paper §5.4). A head's tile is addressed via an inner-dim origin offset
-    of h*D elements."""
-    P = tiling.precision
-    sz_q = B * L * H_q * D * P
-    sz_kv = B * S * H_kv * D * P
-    return {
-        TM_Q: TensorMap(TM_Q, base, (B, L, H_q * D),
-                        (L * H_q * D * P, H_q * D * P, P),
-                        (1, tiling.t_m, D), P),
-        TM_K: TensorMap(TM_K, base + sz_q, (B, S, H_kv * D),
-                        (S * H_kv * D * P, H_kv * D * P, P),
-                        (1, tiling.t_n, D), P),
-        TM_V: TensorMap(TM_V, base + sz_q + sz_kv, (B, S, H_kv * D),
-                        (S * H_kv * D * P, H_kv * D * P, P),
-                        (1, tiling.t_n, D), P),
-        TM_O: TensorMap(TM_O, base + sz_q + 2 * sz_kv, (B, L, H_q * D),
-                        (L * H_q * D * P, H_q * D * P, P),
-                        (1, tiling.t_m, D), P),
-    }
+__all__ = ["FA3Tiling", "softmax_bubble_cycles", "make_tmaps",
+           "fa3_cta_trace", "fa3_kernel_ctas",
+           "TM_Q", "TM_K", "TM_V", "TM_O"]
 
 
 def fa3_cta_trace(cfg: GPUMachine, *, b: int, h_q: int, h_kv: int,
                   q_block: int, S: int, D: int, tiling: FA3Tiling,
                   causal: bool = False, q_base_row: int = 0) -> CTATrace:
-    """Trace for one CTA covering q rows [q_block*t_m, ...) of head h_q.
-
-    WG0 = producer, WG1/WG2 = consumers (ping-pong). Ring-buffer slot ids:
-    K tiles use sid = 2*(j % stages), V tiles sid = 2*(j % stages)+1.
-    """
-    t_m, t_n, stages = tiling.t_m, tiling.t_n, tiling.stages
-    n_tiles = math.ceil(S / t_n)
-    if causal:
-        last_row = q_base_row + q_block * t_m + t_m - 1
-        n_tiles = min(n_tiles, math.ceil((last_row + 1) / t_n))
-    bubbles = softmax_bubble_cycles(cfg, t_m, t_n, D)
-    n_qk = D // 16                      # 8 WGMMAs per QK GEMM (§5.2)
-    n_pv = math.ceil(t_n / 16)          # 11 WGMMAs per PV GEMM
-
-    prod: List[Instr] = []
-    cons: List[List[Instr]] = [[], []]
-
-    # producer: Q first, then stream K/V tiles through the ring buffer
-    prod.append(Instr(isa.TMA_TENSOR, map_id=TM_Q, sid=98,
-                      origin=(b, q_block * t_m, h_q * D), tag="Q"))
-    for j in range(n_tiles):
-        sk = 2 * (j % stages)
-        sv = sk + 1
-        prod.append(Instr(isa.ACQUIRE_STAGE, sid=sk))
-        prod.append(Instr(isa.TMA_TENSOR, map_id=TM_K, sid=sk,
-                          origin=(b, j * t_n, h_kv * D), tag=f"K{j}"))
-        prod.append(Instr(isa.ACQUIRE_STAGE, sid=sv))
-        prod.append(Instr(isa.TMA_TENSOR, map_id=TM_V, sid=sv,
-                          origin=(b, j * t_n, h_kv * D), tag=f"V{j}"))
-
-    # consumers: ping-pong via two named barriers (bid 0 = MMA token,
-    # bid 1 = softmax token). BAR_WAIT.n is an absolute arrival threshold.
-    for c in (0, 1):
-        tr = cons[c]
-        tr.append(Instr(isa.MB_WAIT, sid=98))          # Q ready
-        gid = 0
-        mma_arr = 0                                     # arrivals we produced
-        for j in range(n_tiles):
-            sk = 2 * (j % stages)
-            sv = sk + 1
-            tr.append(Instr(isa.MB_WAIT, sid=sk))       # K tile ready
-            if c == 0:
-                # consumer 1 announces it's entering MMA; consumer 2 waits
-                tr.append(Instr(isa.BAR_ARRIVE, bid=0))
-            else:
-                tr.append(Instr(isa.BAR_WAIT, bid=0, n=j + 1))
-            for _ in range(n_qk):
-                tr.append(Instr(isa.WGMMA, gid=gid, m=t_m, n=t_n, k=16,
-                                tag=f"QK{j}"))
-            tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
-            tr.append(Instr(isa.WGMMA_WAIT, gid=gid, n=1))   # WAIT_WG_1
-            tr.append(Instr(isa.RELEASE_STAGE, sid=sk))      # K done (§5.2)
-            if c == 0:
-                tr.append(Instr(isa.BAR_WAIT, bid=1, n=j + 1))
-            else:
-                tr.append(Instr(isa.BAR_ARRIVE, bid=1))
-            tr.append(Instr(isa.BUBBLES, cycles=bubbles))    # softmax block
-            tr.append(Instr(isa.MB_WAIT, sid=sv))            # V tile ready
-            gid += 1
-            for _ in range(n_pv):
-                tr.append(Instr(isa.WGMMA, gid=gid, m=t_m, n=D, k=16,
-                                tag=f"PV{j}"))
-            tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
-            tr.append(Instr(isa.WGMMA_WAIT, gid=gid, n=0))   # WAIT_WG_0
-            tr.append(Instr(isa.RELEASE_STAGE, sid=sv))      # V done
-            gid += 1
-        # epilogue: store O tile
-        tr.append(Instr(isa.TMA_STORE, map_id=TM_O, gid=99,
-                        origin=(b, q_block * t_m, h_q * D), tag="O"))
-        tr.append(Instr(isa.TMA_COMMIT, gid=99))
-        tr.append(Instr(isa.TMA_WAIT, gid=99, n=0))
-
-    return CTATrace(wgs=[prod] + cons, n_consumers=2,
-                    name=f"b{b}h{h_q}q{q_block}")
+    """Trace for one CTA covering q rows [q_block*t_m, ...) of head h_q."""
+    w = SimpleNamespace(S=S, D=D, causal=causal)
+    return FA3_SPEC.cta(cfg, w, tiling, b=b, h_q=h_q, h_kv=h_kv,
+                        q_block=q_block, q_base_row=q_base_row)
 
 
 def fa3_kernel_ctas(cfg: GPUMachine, *, B: int, H_kv: int, G: int, L: int,
                     S: int, D: int, tiling: FA3Tiling = FA3Tiling(),
                     causal: bool = False,
-                    max_ctas: int | None = None) -> Tuple[List[CTATrace], Dict[int, TensorMap]]:
-    """All CTAs of one FA3 launch: B*H_kv*G heads x ceil(L/T_M) q-blocks.
-
-    CTA order follows the kernel's (head-major) rasterization so that one
-    wave works on as few distinct KV heads as possible — the reuse structure
-    behind Eq. (5)/(6).
-    """
-    tmaps = make_tmaps(B, L, S, H_kv * G, H_kv, D, tiling)
-    ctas = []
-    n_q = math.ceil(L / tiling.t_m)
-    for b in range(B):
-        for hkv in range(H_kv):
-            for g in range(G):
-                hq = hkv * G + g
-                for qb in range(n_q):
-                    ctas.append(fa3_cta_trace(
-                        cfg, b=b, h_q=hq, h_kv=hkv,
-                        q_block=qb, S=S, D=D, tiling=tiling, causal=causal))
-                    if max_ctas and len(ctas) >= max_ctas:
-                        return ctas, tmaps
-    return ctas, tmaps
+                    max_ctas: Optional[int] = None
+                    ) -> Tuple[List[CTATrace], Dict[int, TensorMap]]:
+    """All CTAs of one FA3 launch: B*H_kv*G heads x ceil(L/T_M) q-blocks,
+    head-major rasterized.  ``max_ctas=0`` builds zero CTAs (the historic
+    falsy-guard accident that treated 0 as "unlimited" is gone)."""
+    w = SimpleNamespace(B=B, H_kv=H_kv, G=G, L=L, S=S, D=D, causal=causal)
+    return FA3_SPEC.build(cfg, w, tiling=tiling, max_ctas=max_ctas)

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.llama3 import AttnWorkload
-from repro.core.machine import TPU_V5E
+from repro.core import analytical
+from repro.core.machine import H800, TPU_V5E
 from repro.core.tpu.analytical import analyze_tpu
 from repro.models import api
 from repro.serve.engine import Request, ServeEngine, StragglerPolicy
@@ -42,6 +43,12 @@ def main(argv=None):
     pred = analyze_tpu(w, TPU_V5E)
     print(f"SimFA-TPU decode prediction: {pred.latency*1e6:.1f} us "
           f"({pred.bottleneck}-bound)")
+    # GPU-mode counterpart through the split-KV FlashDecoding kernel's
+    # traffic hooks (the serving workload the cycle engine can now see)
+    gpu = analytical.analyze(w, H800, kernel="splitkv_decode")
+    print(f"SimFA-H800 split-KV decode prediction: {gpu.latency*1e6:.1f} us "
+          f"({gpu.bottleneck}-bound, "
+          f"{gpu.dram_bytes/1e6:.2f} MB DRAM/step)")
 
     eng = ServeEngine(cfg, params, slots=args.slots, max_seq=args.max_seq,
                       straggler=StragglerPolicy(expected_step_s=0.5, factor=10))

@@ -146,9 +146,14 @@ def test_stall_buckets_sum_to_idle():
         assert all(v >= 0 for v in buckets.values())
     # producers stream K/V through acquire/release: their idle must be
     # dominated by ring-buffer (barrier) waits, and consumers must show
-    # tma or wgmma waits somewhere
-    prod = [l for l in rep.per_wg if l.endswith("wg0")]
+    # tma or wgmma waits somewhere.  Buckets are keyed by the kernel IR's
+    # declared role names, not positional WG indices.
+    prod = [l for l in rep.per_wg if l.endswith("/producer")]
+    assert prod
     assert any(rep.per_wg[l]["barrier-wait"] > 0 for l in prod)
+    roles = rep.by_role()
+    assert set(roles) == {"producer", "consumer"}
+    assert roles["producer"]["barrier-wait"] > 0
     text = report.render_stall_report(rep, top=4)
     assert "tma-wait" in text and "TOTAL" in text
 

@@ -13,9 +13,11 @@ broadcast engine on this grid and must never drift.
 """
 import pytest
 
+from repro.configs.llama3 import AttnWorkload
 from repro.core import isa
 from repro.core.engine import CTATrace, Engine
 from repro.core.isa import Instr
+from repro.core.kprog import registry
 from repro.core.machine import H800, h800_variant
 from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
 from repro.analysis.events import EventTracer
@@ -83,6 +85,60 @@ def test_stats_match_pre_refactor_gold(name):
                               "tma_lines", "tc_busy_cycles")}
     got["events"] = len(ev)
     assert got == gold
+
+
+# kernel-spec grid: the three post-IR scenarios, lowered through the
+# registry, must also be scheduler-bit-exact (kernel -> machine, n_sms,
+# workload, tiling)
+KERNEL_CONFIGS = {
+    "fa3_cooperative": (h800_variant(num_sms=4), 4,
+                        AttnWorkload(name="c", B=1, L=256, S=512, H_kv=1,
+                                     G=2, D=128), None),
+    "fa2": (H800, 3,
+            AttnWorkload(name="f", B=1, L=192, S=384, H_kv=1, G=1, D=64),
+            None),
+    "splitkv_decode": (H800, 4,
+                       AttnWorkload(name="d", B=2, L=1, S=2048, H_kv=2,
+                                    G=4, D=128), None),
+}
+
+
+def _run_kernel(name, broadcast):
+    cfg, n_sms, w, tiling = KERNEL_CONFIGS[name]
+    ctas, tmaps = registry.get(name).build(cfg, w, tiling=tiling)
+    tracer = EventTracer()
+    eng = Engine(cfg, n_sms=n_sms, mem_scale=n_sms / cfg.num_sms,
+                 tracer=tracer, broadcast_wake=broadcast)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    events = [(e.eid, e.kind, e.op, e.sm, e.cta, e.wg, e.tag, e.t0, e.t1,
+               e.t_done, e.sid, e.gid, e.bid, e.dep_n, e.fixed, e.src)
+              for e in tracer.events]
+    return eng, st, events
+
+
+@pytest.mark.parametrize("name", sorted(KERNEL_CONFIGS))
+def test_waiter_equals_broadcast_on_kernel_specs(name):
+    eng_w, st_w, ev_w = _run_kernel(name, broadcast=False)
+    eng_b, st_b, ev_b = _run_kernel(name, broadcast=True)
+    assert st_w == st_b
+    assert ev_w == ev_b
+    assert eng_w.deadlocked == eng_b.deadlocked is False
+
+
+def test_decode_traffic_crosschecks_analytical_hook():
+    """Analytical-vs-simulated traffic for a decode workload: the split-KV
+    spec's Eq.-2/6-style hooks must predict the engine's counters."""
+    name = "splitkv_decode"
+    cfg, _, w, _ = KERNEL_CONFIGS[name]
+    spec = registry.get(name)
+    _, st, _ = _run_kernel(name, broadcast=False)
+    assert st["tma_lines"] * cfg.line_bytes == \
+        pytest.approx(spec.l2_traffic(w), rel=0.05)
+    assert st["dram_bytes"] == pytest.approx(
+        spec.dram_real(w, 64, cfg.num_sms, cfg.occupancy_limit), rel=0.05)
 
 
 def test_deadlock_flagged_identically():

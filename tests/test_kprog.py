@@ -1,0 +1,308 @@
+"""Kernel-program IR tests.
+
+1. **Lowering identity** — the registered ``fa3`` spec must reproduce the
+   pre-IR hardcoded generator *instruction for instruction* (a frozen copy
+   of that generator lives below as the reference), so the golden cycle
+   anchors (73614-cycle reference launch, test_engine_equiv GOLD) cannot
+   move.
+2. **Scenario properties** — each new kernel asserts a paper-consistent
+   ordering: cooperative exposes at least as much softmax bubble as
+   ping-pong, non-specialized FA2 is at least as slow as FA3 at equal
+   tiling, and split-KV decode's simulated traffic matches its analytical
+   hooks.
+3. **Driver coverage** — every registered kernel runs under the
+   ``simulate_fa3`` driver in full and hierarchical fidelity without
+   deadlock.
+"""
+import math
+
+import pytest
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core import analytical, isa
+from repro.core.engine import CTATrace
+from repro.core.isa import Instr
+from repro.core.kprog import registry
+from repro.core.kprog.costs import softmax_bubble_cycles
+from repro.core.machine import H800, h800_variant
+from repro.core.simfa import simulate_fa3
+from repro.core.tracegen_fa3 import (TM_K, TM_O, TM_Q, TM_V, FA3Tiling,
+                                     fa3_kernel_ctas, make_tmaps)
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-IR reference generator (verbatim from the pre-kprog
+# tracegen_fa3.py; the IR lowering is held to this, bit for bit)
+# ---------------------------------------------------------------------------
+
+def _legacy_fa3_cta_trace(cfg, *, b, h_q, h_kv, q_block, S, D, tiling,
+                          causal=False, q_base_row=0):
+    t_m, t_n, stages = tiling.t_m, tiling.t_n, tiling.stages
+    n_tiles = math.ceil(S / t_n)
+    if causal:
+        last_row = q_base_row + q_block * t_m + t_m - 1
+        n_tiles = min(n_tiles, math.ceil((last_row + 1) / t_n))
+    bubbles = softmax_bubble_cycles(cfg, t_m, t_n, D)
+    n_qk = D // 16
+    n_pv = math.ceil(t_n / 16)
+
+    prod = []
+    cons = [[], []]
+    prod.append(Instr(isa.TMA_TENSOR, map_id=TM_Q, sid=98,
+                      origin=(b, q_block * t_m, h_q * D), tag="Q"))
+    for j in range(n_tiles):
+        sk = 2 * (j % stages)
+        sv = sk + 1
+        prod.append(Instr(isa.ACQUIRE_STAGE, sid=sk))
+        prod.append(Instr(isa.TMA_TENSOR, map_id=TM_K, sid=sk,
+                          origin=(b, j * t_n, h_kv * D), tag=f"K{j}"))
+        prod.append(Instr(isa.ACQUIRE_STAGE, sid=sv))
+        prod.append(Instr(isa.TMA_TENSOR, map_id=TM_V, sid=sv,
+                          origin=(b, j * t_n, h_kv * D), tag=f"V{j}"))
+
+    for c in (0, 1):
+        tr = cons[c]
+        tr.append(Instr(isa.MB_WAIT, sid=98))
+        gid = 0
+        for j in range(n_tiles):
+            sk = 2 * (j % stages)
+            sv = sk + 1
+            tr.append(Instr(isa.MB_WAIT, sid=sk))
+            if c == 0:
+                tr.append(Instr(isa.BAR_ARRIVE, bid=0))
+            else:
+                tr.append(Instr(isa.BAR_WAIT, bid=0, n=j + 1))
+            for _ in range(n_qk):
+                tr.append(Instr(isa.WGMMA, gid=gid, m=t_m, n=t_n, k=16,
+                                tag=f"QK{j}"))
+            tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+            tr.append(Instr(isa.WGMMA_WAIT, gid=gid, n=1))
+            tr.append(Instr(isa.RELEASE_STAGE, sid=sk))
+            if c == 0:
+                tr.append(Instr(isa.BAR_WAIT, bid=1, n=j + 1))
+            else:
+                tr.append(Instr(isa.BAR_ARRIVE, bid=1))
+            tr.append(Instr(isa.BUBBLES, cycles=bubbles))
+            tr.append(Instr(isa.MB_WAIT, sid=sv))
+            gid += 1
+            for _ in range(n_pv):
+                tr.append(Instr(isa.WGMMA, gid=gid, m=t_m, n=D, k=16,
+                                tag=f"PV{j}"))
+            tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
+            tr.append(Instr(isa.WGMMA_WAIT, gid=gid, n=0))
+            tr.append(Instr(isa.RELEASE_STAGE, sid=sv))
+            gid += 1
+        tr.append(Instr(isa.TMA_STORE, map_id=TM_O, gid=99,
+                        origin=(b, q_block * t_m, h_q * D), tag="O"))
+        tr.append(Instr(isa.TMA_COMMIT, gid=99))
+        tr.append(Instr(isa.TMA_WAIT, gid=99, n=0))
+
+    return CTATrace(wgs=[prod] + cons, n_consumers=2,
+                    name=f"b{b}h{h_q}q{q_block}")
+
+
+LAUNCHES = {
+    "default": dict(B=1, L=256, S=512, H_kv=1, G=2, D=128,
+                    tiling=FA3Tiling()),
+    "causal": dict(B=1, L=256, S=512, H_kv=1, G=1, D=128, causal=True,
+                   tiling=FA3Tiling()),
+    "stages3": dict(B=2, L=128, S=384, H_kv=2, G=1, D=64,
+                    tiling=FA3Tiling(t_m=64, t_n=96, stages=3)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(LAUNCHES))
+def test_fa3_ir_lowering_is_instruction_identical(name):
+    """The IR-lowered FA3 ping-pong spec == the frozen pre-IR generator."""
+    kw = dict(LAUNCHES[name])
+    tiling = kw.pop("tiling")
+    causal = kw.pop("causal", False)
+    ctas, _ = fa3_kernel_ctas(H800, tiling=tiling, causal=causal, **kw)
+    n_q = math.ceil(kw["L"] / tiling.t_m)
+    i = 0
+    for b in range(kw["B"]):
+        for hkv in range(kw["H_kv"]):
+            for g in range(kw["G"]):
+                for qb in range(n_q):
+                    ref = _legacy_fa3_cta_trace(
+                        H800, b=b, h_q=hkv * kw["G"] + g, h_kv=hkv,
+                        q_block=qb, S=kw["S"], D=kw["D"], tiling=tiling,
+                        causal=causal)
+                    got = ctas[i]
+                    assert got.wgs == ref.wgs, f"CTA {i} instruction drift"
+                    assert got.n_consumers == ref.n_consumers
+                    assert got.name == ref.name
+                    i += 1
+    assert i == len(ctas)
+
+
+def test_fa3_ir_roles_label_warpgroups():
+    ctas, _ = fa3_kernel_ctas(H800, B=1, H_kv=1, G=1, L=64, S=256, D=128)
+    assert ctas[0].roles == ["producer", "consumer0", "consumer1"]
+
+
+def test_fa3_tmaps_unchanged():
+    tiling = FA3Tiling()
+    got = registry.get("fa3").tmaps(
+        AttnWorkload(name="t", B=2, L=256, S=512, H_kv=2, G=2, D=128),
+        tiling)
+    ref = make_tmaps(2, 256, 512, 4, 2, 128, tiling)
+    assert got == ref
+    assert set(got) == {TM_Q, TM_K, TM_V, TM_O}
+
+
+def test_max_ctas_zero_builds_zero_ctas():
+    """The falsy-zero guard accident (0 meant "unlimited") is fixed."""
+    for max_ctas, expect in ((0, 0), (3, 3), (None, 4)):
+        ctas, _ = fa3_kernel_ctas(H800, B=1, H_kv=1, G=1, L=256, S=256,
+                                  D=128, max_ctas=max_ctas)
+        assert len(ctas) == expect, max_ctas
+
+
+def test_registry_contents():
+    assert registry.available() == ["fa2", "fa3", "fa3_cooperative",
+                                    "splitkv_decode"]
+    spec = registry.get("fa3")
+    assert registry.get(spec) is spec
+    with pytest.raises(KeyError):
+        registry.get("fa7")
+
+
+def test_reference_launch_golden_anchor():
+    """The reference full-fidelity FA3 launch (the BENCH_engine.json
+    "full" workload) must stay at exactly 73614 cycles through the IR."""
+    w = AttnWorkload(name="full", B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+    res = simulate_fa3(w, H800, fidelity="full")
+    assert res.cycles == 73614
+    assert not res.deadlocked
+
+
+# ---------------------------------------------------------------------------
+# scenario properties (paper-consistent orderings)
+# ---------------------------------------------------------------------------
+
+# compute-bound probe: few SMs so the tensor core / softmax — not launch
+# latency — decide the makespan, and a MUFU-starved variant so the bubble
+# outweighs the per-tile WGMMA work it could hide behind
+CFG_BOUND = h800_variant(num_sms=2, mufu_ops_per_cycle=4)
+CFG_FASTSM = h800_variant(num_sms=2, mufu_ops_per_cycle=4096,
+                          fp32_ops_per_cycle=65536, fp16_ops_per_cycle=65536)
+W_BOUND = AttnWorkload(name="bound", B=1, L=128, S=2048, H_kv=1, G=1, D=128)
+
+
+def _exposure(kernel):
+    """Exposed softmax cycles: makespan minus the same launch on a machine
+    whose CUDA-core throughput makes the bubbles ~free."""
+    a = simulate_fa3(W_BOUND, CFG_BOUND, fidelity="full", kernel=kernel)
+    b = simulate_fa3(W_BOUND, CFG_FASTSM, fidelity="full", kernel=kernel)
+    assert not a.deadlocked and not b.deadlocked
+    return a.cycles - b.cycles, a.cycles
+
+
+def test_cooperative_exposes_at_least_pingpong_bubbles():
+    exp_pp, cyc_pp = _exposure("fa3")
+    exp_co, cyc_co = _exposure("fa3_cooperative")
+    assert exp_co >= exp_pp            # no token pass -> more exposure
+    assert exp_co > 0                  # and it is real exposure
+    assert cyc_co >= cyc_pp            # which costs latency
+
+
+def test_fa2_at_least_fa3_latency_at_equal_tiling():
+    _, cyc_fa3 = _exposure("fa3")
+    _, cyc_fa2 = _exposure("fa2")
+    assert cyc_fa2 >= cyc_fa3
+
+
+def test_fa2_doubles_tile_traffic():
+    w = AttnWorkload(name="t", B=1, L=128, S=1024, H_kv=1, G=1, D=128)
+    r3 = simulate_fa3(w, H800, fidelity="full", kernel="fa3")
+    r2 = simulate_fa3(w, H800, fidelity="full", kernel="fa2")
+    # per-worker private rings: ~2x the K/V demand traffic toward L2
+    assert r2.l2_bytes > 1.6 * r3.l2_bytes
+    # and the kernels' analytical hooks see the same ordering
+    s3, s2 = registry.get("fa3"), registry.get("fa2")
+    assert s2.l2_traffic(w, 64) > 1.6 * s3.l2_traffic(w, 64)
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode
+# ---------------------------------------------------------------------------
+
+W_DECODE = AttnWorkload(name="dec", B=2, L=1, S=4096, H_kv=2, G=4, D=128)
+
+
+def test_decode_traffic_matches_analytical_hooks():
+    spec = registry.get("splitkv_decode")
+    res = simulate_fa3(W_DECODE, H800, fidelity="full",
+                       kernel="splitkv_decode")
+    assert not res.deadlocked
+    model_dram = spec.dram_real(W_DECODE, 64, H800.num_sms,
+                                H800.occupancy_limit)
+    model_l2 = spec.l2_traffic(W_DECODE)
+    assert res.dram_bytes == pytest.approx(model_dram, rel=0.05)
+    assert res.l2_bytes == pytest.approx(model_l2, rel=0.05)
+    # analyze() dispatches through the same hooks
+    rep = analytical.analyze(W_DECODE, H800, kernel="splitkv_decode")
+    assert rep.l2_bytes == model_l2
+
+
+def test_decode_splits_fill_the_machine():
+    spec = registry.get("splitkv_decode")
+    tl = spec.default_tiling()
+    assert spec.total_ctas(W_DECODE) == \
+        W_DECODE.B * W_DECODE.H_kv * (tl.n_split + 1)
+    ctas, tmaps = spec.build(H800, W_DECODE)
+    names = [c.name for c in ctas]
+    assert sum(1 for n in names if n.endswith("red")) == \
+        W_DECODE.B * W_DECODE.H_kv
+    # split CTAs launch before the reductions that consume their partials
+    first_red = next(i for i, n in enumerate(names) if n.endswith("red"))
+    assert first_red == W_DECODE.B * W_DECODE.H_kv * tl.n_split
+    assert ctas[0].roles == ["producer", "consumer"]
+    assert ctas[-1].roles == ["reducer"]
+
+
+# ---------------------------------------------------------------------------
+# driver coverage: every kernel, both fidelities, no deadlock
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["fa3", "fa3_cooperative", "fa2",
+                                    "splitkv_decode"])
+@pytest.mark.parametrize("fidelity", ["full", "hierarchical"])
+def test_all_kernels_run_both_fidelities(kernel, fidelity):
+    w = (W_DECODE if kernel == "splitkv_decode" else
+         AttnWorkload(name="t", B=1, L=256, S=512, H_kv=1, G=2, D=128))
+    res = simulate_fa3(w, H800, fidelity=fidelity, kernel=kernel, n_sub=2)
+    assert not res.deadlocked
+    assert res.cycles > 0
+    assert res.fidelity == fidelity
+    assert res.kernel == kernel
+
+
+# ---------------------------------------------------------------------------
+# analytical: shared bubble arithmetic + per-kernel dispatch
+# ---------------------------------------------------------------------------
+
+def test_bubble_arithmetic_is_shared_and_exact():
+    # paper §5.2 reference point (88+704+88+44+32; the golden cycle
+    # anchors are built on this exact value)
+    assert softmax_bubble_cycles(H800, 64, 176, 128) == 956
+
+
+def test_analyze_takes_t_n_from_tiling():
+    w = AttnWorkload(name="t", B=1, L=4096, S=4096, H_kv=8, G=4, D=128)
+    base = analytical.analyze(w, H800)
+    explicit = analytical.analyze(w, H800, t_n=176)
+    assert base.t_ramp == explicit.t_ramp           # 176 is the default
+    other = analytical.analyze(w, H800, t_n=96)
+    assert other.t_ramp < base.t_ramp               # smaller tile, smaller
+    assert other.l2_bytes == base.l2_bytes          # ramp only
+
+
+def test_analyze_kernel_dispatch_defaults_to_fa3_equations():
+    w = AttnWorkload(name="t", B=1, L=4096, S=4096, H_kv=8, G=4, D=128)
+    rep = analytical.analyze(w, H800, kernel="fa3")
+    assert rep.l2_bytes == analytical.l2_traffic(w, 64)
+    assert rep.dram_ideal_bytes == analytical.dram_ideal(w)
+    rep2 = analytical.analyze(w, H800, kernel="fa2")
+    assert rep2.l2_bytes > rep.l2_bytes
