@@ -2,9 +2,9 @@
 
 Measures how fast the cycle engine *simulates* (not what it predicts):
 wall seconds, simulated cycles/s and executed events/s on small / medium /
-full-fidelity FA3 launches, for the default waiter-indexed scheduler and —
-on the full workload — the legacy broadcast fallback, so the speedup the
-waiter scheduler buys stays measurable forever.
+full-fidelity FA3 launches for the default event-driven scheduler, and —
+on the full workload — the waiter and legacy broadcast fallbacks, so the
+speedup each scheduler generation buys stays measurable forever.
 
     PYTHONPATH=src:. python benchmarks/bench_engine.py            # full run
     PYTHONPATH=src:. python benchmarks/bench_engine.py --smoke    # CI guard
@@ -14,13 +14,23 @@ A standalone full run rewrites ``BENCH_engine.json`` at the repo root
 (committed: the baseline subsequent PRs are held to) plus the usual
 ``results/bench/engine.json``; via ``benchmarks/run.py`` only the latter is
 written, so sweeping all benches never clobbers the committed baseline.
-``--smoke`` runs the tiny workload only, validates the JSON schema, and
-writes nothing at the repo root.
+The committed baseline is *trajectory-aware*: every standalone full run
+appends a dated, git-sha-stamped summary row to its ``history`` list (the
+current ``rows``/``derived`` are replaced; history only grows), so the
+engine's throughput over the life of the repo stays inspectable.
+
+``--smoke`` runs the tiny workload only and gates **two-sided** against the
+committed baseline's smoke row: simulated cycle count must match exactly
+(correctness side) and cycles/s must be neither far below the baseline
+(perf regression) nor absurdly above it (the workload stopped simulating
+what it used to).  It writes nothing.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import math
+import subprocess
 import time
 from pathlib import Path
 
@@ -50,22 +60,32 @@ WORKLOADS = {
 ROW_SCHEMA = ("workload", "wall_s", "sim_cycles", "cycles_per_s",
               "events_per_s")
 
+# Two-sided smoke gate vs. the committed baseline's smoke row: fail when
+# cycles/s drop below MIN_RATIO x baseline (perf regression; generous to
+# absorb CI-runner jitter) or exceed MAX_RATIO x baseline (a speedup that
+# large means the simulated workload shrank, not that the engine got fast).
+SMOKE_MIN_RATIO = 0.4
+SMOKE_MAX_RATIO = 8.0
+
 # One-time measurement of the pre-refactor (PR<4) broadcast engine on the
 # "full" workload, taken on the baseline machine when this bench was
 # introduced: wall median of 3 runs.  Only meaningful relative to wall
-# times measured on that machine; the re-measurable comparator on any
-# machine is the broadcast-fallback row below.
+# times measured on that machine; the re-measurable comparators on any
+# machine are the waiter/broadcast rows below.
 PRE_REFACTOR_FULL_WALL_S = 18.8
 
+# stats keys every scheduler must agree on bit-exactly
+EQUIV_KEYS = ("sim_cycles", "dram_bytes", "l2_req_bytes", "tma_lines")
 
-def _measure(w: AttnWorkload, broadcast: bool = False) -> dict:
+
+def _measure(w: AttnWorkload, scheduler: str = "event") -> dict:
     cfg = H800
     tiling = FA3Tiling()
     total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
     ctas, tmaps = fa3_kernel_ctas(
         cfg, B=w.B, H_kv=w.H_kv, G=w.G, L=w.L, S=w.S, D=w.D, tiling=tiling,
         causal=w.causal, max_ctas=total)
-    eng = Engine(cfg, broadcast_wake=broadcast)
+    eng = Engine(cfg, scheduler=scheduler)
     for tm in tmaps.values():
         eng.define_tmap(tm)
     t0 = time.perf_counter()
@@ -79,7 +99,7 @@ def _measure(w: AttnWorkload, broadcast: bool = False) -> dict:
         "cycles_per_s": round(st["cycles"] / wall, 1),
         "events_per_s": round(eng.evq.popped / wall, 1),
         "n_ctas": len(ctas),
-        "scheduler": "broadcast" if broadcast else "waiter",
+        "scheduler": scheduler,
         "dram_bytes": st["dram_bytes"],
         "l2_req_bytes": st["l2_req_bytes"],
         "tma_lines": st["tma_lines"],
@@ -94,8 +114,35 @@ def validate_row(row: dict) -> None:
     assert row["cycles_per_s"] > 0 and row["events_per_s"] > 0
 
 
+def load_baseline() -> dict:
+    if BASELINE_PATH.exists():
+        return json.loads(BASELINE_PATH.read_text())
+    return {}
+
+
+def smoke_gate(row: dict, baseline: dict) -> None:
+    """Two-sided CI gate: exact simulated-cycle match + bounded cycles/s
+    ratio vs. the committed baseline's smoke row."""
+    base_row = next((r for r in baseline.get("rows", [])
+                     if r.get("workload") == "smoke"), None)
+    if base_row is None:
+        return      # no committed smoke row yet: schema validation only
+    assert row["sim_cycles"] == base_row["sim_cycles"], (
+        f"smoke sim_cycles drifted: {row['sim_cycles']} != committed "
+        f"{base_row['sim_cycles']} — the engine changed behavior")
+    ratio = row["cycles_per_s"] / base_row["cycles_per_s"]
+    assert ratio >= SMOKE_MIN_RATIO, (
+        f"engine throughput regression: smoke cycles/s at {ratio:.2f}x of "
+        f"committed baseline ({row['cycles_per_s']:.0f} vs "
+        f"{base_row['cycles_per_s']:.0f}; floor {SMOKE_MIN_RATIO}x)")
+    assert ratio <= SMOKE_MAX_RATIO, (
+        f"smoke cycles/s at {ratio:.2f}x of committed baseline — too fast "
+        f"to be the same simulation (cap {SMOKE_MAX_RATIO}x); re-baseline "
+        f"deliberately if this is a real engine speedup")
+
+
 def run(sink: Sink, smoke: bool = False, profile: bool = False):
-    names = ["smoke"] if smoke else ["small", "medium", "full"]
+    names = ["smoke"] if smoke else ["smoke", "small", "medium", "full"]
     rows = []
     with maybe_profile(profile):
         for name in names:
@@ -104,28 +151,77 @@ def run(sink: Sink, smoke: bool = False, profile: bool = False):
             rows.append(row)
             sink.row(**row)
     if not smoke:
-        # broadcast fallback on the reference launch: the waiter scheduler's
-        # speedup, re-measurable on any machine
-        b = _measure(WORKLOADS["full"], broadcast=True)
-        sink.row(**b)
-        waiter = next(r for r in rows if r["workload"] == "full")
-        for key in ("sim_cycles", "dram_bytes", "l2_req_bytes", "tma_lines"):
-            assert waiter[key] == b[key], \
-                f"scheduler equivalence broken on {key}: {waiter[key]} != {b[key]}"
+        # waiter + broadcast fallbacks on the reference launch: each
+        # scheduler generation's speedup, re-measurable on any machine
+        event = next(r for r in rows if r["workload"] == "full")
+        comparators = []
+        for sched in ("waiter", "broadcast"):
+            c = _measure(WORKLOADS["full"], scheduler=sched)
+            comparators.append(c)
+            sink.row(**c)
+            for key in EQUIV_KEYS:
+                assert event[key] == c[key], (
+                    f"scheduler equivalence broken on {key} (event vs "
+                    f"{sched}): {event[key]} != {c[key]}")
+        waiter, broadcast = comparators
         sink.derive(
-            speedup_vs_broadcast=round(b["wall_s"] / waiter["wall_s"], 2),
+            speedup_vs_waiter=round(waiter["wall_s"] / event["wall_s"], 2),
+            speedup_vs_broadcast=round(
+                broadcast["wall_s"] / event["wall_s"], 2),
             speedup_vs_pre_refactor=round(
-                PRE_REFACTOR_FULL_WALL_S / waiter["wall_s"], 2),
+                PRE_REFACTOR_FULL_WALL_S / event["wall_s"], 2),
             pre_refactor_full_wall_s=PRE_REFACTOR_FULL_WALL_S,
-            full_cycles_per_s=waiter["cycles_per_s"],
+            full_cycles_per_s=event["cycles_per_s"],
         )
+        rows.extend(comparators)
     return rows
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
 def write_baseline(sink: Sink, rows: list) -> None:
-    """Overwrite the *committed* trajectory baseline.  Standalone invocation
-    only — ``benchmarks/run.py`` runs must not clobber it in passing."""
-    baseline = {"bench": "engine", "rows": rows, "derived": sink.derived}
+    """Rewrite the *committed* trajectory baseline, preserving and extending
+    its ``history``: the previous runs' summaries stay, this run appends
+    one dated/sha-stamped row.  Standalone invocation only —
+    ``benchmarks/run.py`` runs must not clobber it in passing."""
+    prev = load_baseline()
+    history = list(prev.get("history", []))
+    if not history and prev.get("rows"):
+        # first trajectory-aware run: fold the pre-history committed
+        # baseline in as the opening entry so the old numbers survive
+        pf = next((r for r in prev["rows"] if r.get("workload") == "full"),
+                  None)
+        if pf:
+            history.append({
+                "date": None, "git_sha": "pre-history",
+                "full_wall_s": pf.get("wall_s"),
+                "full_cycles_per_s": pf.get("cycles_per_s"),
+                "scheduler": pf.get("scheduler", "waiter"),
+                **{k: v for k, v in prev.get("derived", {}).items()
+                   if k.startswith("speedup_")},
+            })
+    full = next((r for r in rows if r["workload"] == "full"
+                 and r["scheduler"] == "event"), None)
+    entry = {
+        "date": datetime.date.today().isoformat(),
+        "git_sha": _git_sha(),
+        "full_wall_s": full["wall_s"] if full else None,
+        "full_cycles_per_s": full["cycles_per_s"] if full else None,
+        "scheduler": "event",
+        **{k: v for k, v in sink.derived.items()
+           if k.startswith("speedup_")},
+    }
+    history.append(entry)
+    baseline = {"bench": "engine", "rows": rows, "derived": sink.derived,
+                "history": history}
     BASELINE_PATH.write_text(json.dumps(baseline, indent=1) + "\n")
 
 
@@ -135,7 +231,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny workload only; validate schema; write nothing")
+                    help="tiny workload only; two-sided gate vs. committed "
+                         "baseline; write nothing")
     ap.add_argument("--profile", action="store_true",
                     help="cProfile the simulation and dump the top 20")
     args = ap.parse_args()
@@ -148,8 +245,10 @@ if __name__ == "__main__":
         print(f"baseline written: {BASELINE_PATH}")
         print(sink.derived)
     else:
-        # CI guard: completed + schema-valid is the contract
+        # CI guard: completed + schema-valid + two-sided baseline gate
+        baseline = load_baseline()
         for row in rows:
             validate_row(row)
+            smoke_gate(row, baseline)
         print("smoke ok:", json.dumps(rows))
     sys.exit(0)

@@ -13,9 +13,14 @@ Implements the paper's Algorithm 1:
     in full — the paper found incomplete barrier modeling breaks overlap
     estimation (§4.1).
 
-Timing jumps between "interesting" cycles (event completions / ready
-threads); it never ticks idle cycles, which is what makes a Python
-implementation viable where the paper uses C++.
+The default run loop (``scheduler="event"``) is a true discrete-event
+loop: time jumps straight to the next interesting cycle — the event-queue
+head or the next cycle any SM can issue — and *nothing scans threads*.
+Each SM keeps a maintained issue-eligible ready queue (READY, non-busy,
+non-done threads in GTO dispatch order), ``busy_until`` sleepers park on
+coalesced per-SM timer events (``EventQueue.wake_at``), and the active-SM
+set is a flag-guarded min-heap drained in ascending id order.  That is
+what makes a Python implementation viable where the paper uses C++.
 
 Scheduling is *condition-indexed*: a thread whose wait condition fails is
 parked on a waiter list keyed by exactly what it waits for — an mbarrier
@@ -24,16 +29,21 @@ drain, a named-barrier arrival, a tensor-core buffer slot, or a
 ``busy_until`` timer — and each completion event wakes only the threads
 whose condition just became satisfiable.  A woken thread's condition is
 always re-validated at issue time in ``SM.step``, so a spurious wake is
-harmless; the waiter index only has to never *miss* a wake.  The legacy
-broadcast scheduler (every completion re-marks every resident thread
-READY and rescans) survives behind ``Engine(broadcast_wake=True)`` as a
-deadlock-safety / equivalence-testing fallback; both schedulers are
-cycle-for-cycle identical (see ``tests/test_engine_equiv.py``).
+harmless; the wake index only has to never *miss* a wake.  Two fallback
+schedulers survive for equivalence testing and deadlock safety:
+``scheduler="waiter"`` (the condition-indexed scan loop this PR's event
+loop grew out of) and ``scheduler="broadcast"`` / ``broadcast_wake=True``
+(every completion re-marks every resident thread READY and rescans).  All
+three are cycle-for-cycle *bit-exact* — identical ``stats()`` dicts and
+event streams (see ``tests/test_engine_equiv.py``).
 """
 from __future__ import annotations
 
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass
+from heapq import heappop, heappush
+from operator import attrgetter
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import isa
@@ -42,6 +52,8 @@ from repro.core.machine import GPUMachine
 from repro.core.memory import EventQueue, build_memory
 
 READY, STALLED, DONE = 0, 1, 2
+
+_ORDER = attrgetter("order")    # GTO dispatch-order sort key
 
 
 @dataclass
@@ -61,7 +73,8 @@ class CTATrace:
 class WGThread:
     __slots__ = ("trace", "trace_len", "pc", "state", "cta", "wg_id", "sm",
                  "busy_until", "wgmma_groups", "tma_groups", "wgmma_out",
-                 "tma_out", "mb_expected", "acq_count", "label", "parked")
+                 "tma_out", "mb_expected", "acq_count", "label", "parked",
+                 "order", "in_ready")
 
     def __init__(self, trace, cta, wg_id):
         self.trace = trace
@@ -83,6 +96,8 @@ class WGThread:
         self.acq_count: Dict[int, int] = {}
         self.label = ""
         self.parked = False      # registered on a keyed waiter list
+        self.order = (0, wg_id)  # GTO dispatch-order key, set by CTA
+        self.in_ready = False    # member of its SM's issue-eligible queue
 
     def done(self):
         return self.pc >= self.trace_len
@@ -102,6 +117,7 @@ class CTA:
         for i, t in enumerate(self.threads):
             role = roles[i] if roles and i < len(roles) else f"wg{i}"
             t.label = f"cta{idx}/{role}"
+            t.order = (idx, i)
         self.mbarrier: Dict[int, int] = {}        # sid -> completed signals
         self.stage_releases: Dict[int, int] = {}  # sid -> consumer releases
         self.bar_arrivals: Dict[int, int] = {}    # bid -> arrivals
@@ -185,7 +201,6 @@ class TMAEngine:
         # frozen-config hot constants, hoisted off the issue path
         self._lpc = cfg.tma_lines_per_cycle
         self._cap = cfg.tma_max_inflight_lines
-        self.inflight = 0
         self.jobs: List[dict] = []    # live jobs, round-robin issue order
         self.lines_issued = 0
         self.lines_queued = 0         # un-issued lines across all live jobs
@@ -243,21 +258,62 @@ class TMAEngine:
 
     def _make_done(self, job):
         """One shared completion callback per job — the LRC invokes it once
-        per finished line (shared counter, no per-line closures)."""
+        per finished line (shared counter, no per-line closures).
+
+        The steady-state path is *targeted*: between issue events, only the
+        job whose line just completed can have both queued lines and
+        in-flight room (any other job with room would already have issued
+        when capacity last appeared), so — mid-cycle, budget permitting —
+        its replacement line is issued directly instead of re-scanning all
+        live jobs.  The full scan is kept for cycle boundaries, where the
+        budget resets and rate-limited jobs must issue in legacy order."""
+        lrc = self.lrc
+        eng = self.eng
+        sm_id = self.sm.sm_id
         def done():
-            self.inflight -= 1
-            job["inflight"] -= 1
             job["left"] -= 1
             if job["left"] == 0:
                 self._finish(job)
-            if self.lines_queued:    # freed capacity can admit queued lines
-                now = self.eng.cycle
-                # skip when _issue would provably no-op: same cycle, per-cycle
-                # budget spent, and the carry-over kick is already scheduled
-                if (now > self._issue_cycle
-                        or self._issued_in_cycle < self._lpc
-                        or not self._kick_scheduled):
-                    self._issue(now)
+                if (self.lines_queued and self._kick_scheduled
+                        and eng.cycle > self._issue_cycle):
+                    self._issue(eng.cycle)
+                return
+            lines = job["lines"]
+            now = eng.cycle
+            if now > self._issue_cycle:
+                if self._kick_scheduled:
+                    # an unfired carry-over kick covers rate-limited jobs
+                    # that must issue first, in legacy scan order
+                    job["inflight"] -= 1
+                    if self.lines_queued:
+                        self._issue(now)
+                    return
+                if not lines:
+                    job["inflight"] -= 1
+                    return
+                # fresh cycle, no carry-over work: the budget resets and
+                # this job is the only issue-eligible one
+                self._issue_cycle = now
+                self._issued_in_cycle = 1
+                self.lines_issued += 1
+                self.lines_queued -= 1
+                lrc.request_one(now, lines.popleft(), sm_id, done,
+                                job["write"])
+                return
+            if lines and self._issued_in_cycle < self._lpc:
+                # targeted refill: this job freed exactly one slot, and no
+                # other job can be issue-eligible mid-cycle (see above)
+                self._issued_in_cycle += 1
+                self.lines_issued += 1
+                self.lines_queued -= 1
+                lrc.request_one(now, lines.popleft(), sm_id, done,
+                                job["write"])
+                return
+            job["inflight"] -= 1
+            if lines and not self._kick_scheduled:
+                # budget spent with lines still queued: carry over
+                self._kick_scheduled = True
+                self.evq.push(now + 1, self._kick)
         return done
 
     def _start(self, job):
@@ -278,6 +334,8 @@ class TMAEngine:
         budget = self._lpc - self._issued_in_cycle
         if budget > 0 and self.lines_queued:
             inflight_cap = self._cap
+            request_one = self.lrc.request_one
+            sm_id = self.sm.sm_id
             for job in self.jobs:
                 if budget <= 0:
                     break
@@ -291,15 +349,16 @@ class TMAEngine:
                     take = room
                 if take <= 0:
                     continue
-                batch = [lines.popleft() for _ in range(take)]
                 job["inflight"] += take
-                self.inflight += take
                 self.lines_issued += take
                 self.lines_queued -= take
                 self._issued_in_cycle += take
                 budget -= take
-                self.lrc.request_many(cycle, batch, self.sm.sm_id,
-                                      job["done"], write=job["write"])
+                done_cb = job["done"]
+                write = job["write"]
+                for _ in range(take):
+                    request_one(cycle, lines.popleft(), sm_id, done_cb,
+                                write)
         # rate-limited this cycle with lines still issuable: kick next cycle.
         # (inflight-capped jobs are re-kicked by their done() callbacks)
         if (self.lines_queued and not self._kick_scheduled
@@ -348,8 +407,17 @@ class SM:
         self.evq = engine.evq
         self.tracer = engine.tracer
         self.broadcast = engine.broadcast_wake
+        self.event = engine.scheduler == "event"
         self.ctas: List[CTA] = []
         self._threads: List[WGThread] = []   # flat resident non-DONE threads
+        # event-mode issue-eligible queue: READY, non-busy, non-done threads
+        # in GTO dispatch order (sorted by WGThread.order); kept exact by the
+        # state transitions in step()/_execute()/wakes, so neither step() nor
+        # the run loop ever scans blocked threads
+        self._ready: List[WGThread] = []
+        # event-mode busy-timer park: wake cycle -> threads sleeping on
+        # busy_until (BUBBLES), woken by one coalesced evq.wake_at per cycle
+        self._timers: Dict[int, List[WGThread]] = {}
         self.tc = TensorCoreEngine(cfg, self.evq, self)
         self.tma = TMAEngine(cfg, self.evq, self, engine.lrc, engine.tmaps)
         self.current: Optional[WGThread] = None   # GTO greedy pointer
@@ -365,6 +433,18 @@ class SM:
 
     def wake_all(self):
         self.engine.mark_active(self)
+
+    def _timer_fire(self, cycle: int):
+        """Coalesced busy_until timer (event mode): return every thread whose
+        bubble drains at ``cycle`` to the ready queue.  Threads that went
+        DONE while draining (trace ended on the bubble) are skipped — their
+        retirement is a separate _finish_thread event."""
+        for th in self._timers.pop(cycle, ()):
+            if th.state == READY:
+                th.in_ready = True
+                insort(self._ready, th, key=_ORDER)
+        if self._ready:
+            self.engine.mark_active(self)
 
     def has_slot(self) -> bool:
         return len(self.ctas) < self.cfg.occupancy_limit
@@ -431,10 +511,14 @@ class SM:
         """Wake every parked thread whose condition now holds."""
         woke = False
         kept = []
+        event = self.event
         for th in lst:
             if self._cond_met(th, th.trace[th.pc]):
                 th.parked = False
                 th.state = READY
+                if event:
+                    th.in_ready = True
+                    insort(self._ready, th, key=_ORDER)
                 woke = True
             else:
                 kept.append(th)
@@ -470,6 +554,9 @@ class SM:
             if (ins.op == isa.WGMMA_WAIT or ins.op == isa.TMA_WAIT) \
                     and self._cond_met(th, ins):
                 th.state = READY
+                if self.event:
+                    th.in_ready = True
+                    insort(self._ready, th, key=_ORDER)
                 self.engine.mark_active(self)
 
     def notify_tc(self):
@@ -481,14 +568,20 @@ class SM:
         """Issue up to issue_width instructions. Returns True if progressed."""
         progressed = False
         broadcast = self.broadcast
+        event = self.event
         for _ in range(self.cfg.issue_width):
             issued = False
-            for th in self._candidates(cycle):
+            cands = (self._candidates_event() if event
+                     else self._candidates(cycle))
+            for th in cands:
                 ins = th.trace[th.pc]
                 if not self._cond_met(th, ins):
                     th.state = STALLED   # PC rollback: do not advance
                     if not broadcast:
                         self._park(th, ins)
+                    if event and th.in_ready:
+                        th.in_ready = False
+                        self._ready.remove(th)
                     if self.current is th:
                         self.current = None
                     continue             # GTO: fall through to next-oldest
@@ -503,6 +596,9 @@ class SM:
                 if th.pc >= th.trace_len:
                     th.state = DONE
                     self.current = None
+                    if event and th.in_ready:
+                        th.in_ready = False
+                        self._ready.remove(th)
                     # retirement waits for trailing in-flight work (bubbles)
                     fin = max(cycle, th.busy_until)
                     if fin > cycle:
@@ -526,6 +622,19 @@ class SM:
                 continue
             if (th.state == READY and th.pc < th.trace_len
                     and th.busy_until <= cycle):
+                yield th
+
+    def _candidates_event(self):
+        """Event-mode candidates: the maintained ready queue is already
+        filtered (READY, non-busy, non-done) and in dispatch order, so this
+        only has to overlay the GTO greedy-current priority.  The snapshot
+        is safe: within one issue, the only queue mutation before ``break``
+        is the removal of the thread currently being examined."""
+        cur = self.current
+        if cur is not None and cur.in_ready:
+            yield cur
+        for th in tuple(self._ready):
+            if th is not cur and th.in_ready:
                 yield th
 
     def _execute(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
@@ -556,8 +665,22 @@ class SM:
             cta.bar_arrivals[ins.bid] = cta.bar_arrivals.get(ins.bid, 0) + 1
             self.notify_bar(cta, ins.bid)
         elif op == isa.BUBBLES:
-            th.busy_until = cycle + ins.cycles
-            self.evq.push(th.busy_until, self.wake_all)
+            until = cycle + ins.cycles
+            th.busy_until = until
+            if self.event:
+                # park on a per-SM timer: one coalesced wake per (cycle, SM)
+                # instead of one broadcast wake_all per bubble
+                if th.in_ready:
+                    th.in_ready = False
+                    self._ready.remove(th)
+                lst = self._timers.get(until)
+                if lst is None:
+                    self._timers[until] = [th]
+                    self.evq.wake_at(until, self._timer_fire)
+                else:
+                    lst.append(th)
+            else:
+                self.evq.push(until, self.wake_all)
         # waits that reached here had their condition met: no-op
 
     def _finish_thread(self, th: WGThread):
@@ -589,10 +712,22 @@ class SM:
 class Engine:
     """Top level: CTA dispatcher + global cycle loop (Algorithm 1)."""
 
+    SCHEDULERS = ("event", "waiter", "broadcast")
+
     def __init__(self, machine: GPUMachine, n_sms: Optional[int] = None,
                  mem_scale: Optional[float] = None, record_gantt: bool = False,
                  seed: int = 0, direct_hbm: bool = False, tracer=None,
-                 broadcast_wake: bool = False):
+                 broadcast_wake: bool = False,
+                 scheduler: Optional[str] = None):
+        if scheduler is None:
+            scheduler = "broadcast" if broadcast_wake else "event"
+        elif scheduler not in self.SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             f"expected one of {self.SCHEDULERS}")
+        elif broadcast_wake and scheduler != "broadcast":
+            raise ValueError("broadcast_wake=True conflicts with "
+                             f"scheduler={scheduler!r}")
+        self.scheduler = scheduler
         self.cfg = machine
         self.n_sms = n_sms or machine.num_sms
         scale = mem_scale if mem_scale is not None else self.n_sms / machine.num_sms
@@ -608,7 +743,7 @@ class Engine:
             tracer = EventTracer()
         self.tracer = tracer
         self.record_gantt = tracer is not None
-        self.broadcast_wake = broadcast_wake
+        self.broadcast_wake = scheduler == "broadcast"
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
         self.pending: deque = deque()
         self.cycle = 0
@@ -616,6 +751,12 @@ class Engine:
         self.retired = 0
         self.deadlocked = False
         self._active = set(range(self.n_sms))
+        # event mode: the active set is a maintained ordered structure —
+        # a min-heap of sm ids plus a membership flag per SM (no duplicate
+        # entries), so the run loop drains it in ascending-id order instead
+        # of re-sorting a set every iteration
+        self._active_heap: List[int] = list(range(self.n_sms))
+        self._active_flags = bytearray([1]) * self.n_sms
 
     # ------------------------------------------------------------------
     def define_tmap(self, tm: TensorMap):
@@ -635,6 +776,9 @@ class Engine:
                 sm.ctas.append(cta)
                 for th in cta.threads:
                     th.sm = sm
+                    if sm.event:
+                        th.in_ready = True
+                        insort(sm._ready, th, key=_ORDER)
                 added = True
                 if self.tracer is not None:
                     self.tracer.on_dispatch(cta.idx, parent)
@@ -647,12 +791,20 @@ class Engine:
         self._dispatch(parent=cta.idx)
 
     def mark_active(self, sm: SM):
+        if sm.event:
+            sid = sm.sm_id
+            if not self._active_flags[sid]:
+                self._active_flags[sid] = 1
+                heappush(self._active_heap, sid)
+            return
         self._active.add(sm.sm_id)
         if self.broadcast_wake:
             sm.unstall()
 
     # ------------------------------------------------------------------
     def run(self, max_cycles: int = 2_000_000_000) -> dict:
+        if self.scheduler == "event":
+            return self._run_event(max_cycles)
         broadcast = self.broadcast_wake
         active = self._active
         sms = self.sms
@@ -693,6 +845,56 @@ class Engine:
                     # legacy rescan: re-mark every SM after each time jump
                     for sm in sms:
                         self.mark_active(sm)
+        return self.stats()
+
+    def _run_event(self, max_cycles: int) -> dict:
+        """Discrete-event run loop (default scheduler).
+
+        Time advances straight to the next interesting cycle: the event-queue
+        head (memory completions, busy-timer wakes, thread retirements) or
+        the next cycle any SM can issue.  Nothing here scans threads:
+        ``sm._ready`` is the maintained per-SM issue-eligible queue, the
+        active set is a flag-guarded min-heap of SM ids drained in ascending
+        order, and busy_until sleepers wake via coalesced per-SM timers —
+        there is no broadcast wake and no O(threads) busy-scan fallback.
+
+        The snapshot discipline matches the legacy loop exactly: the set of
+        SMs stepped in a cycle is fixed before any of them steps, so an SM
+        woken mid-sweep first issues on the following cycle."""
+        sms = self.sms
+        evq = self.evq
+        heap = self._active_heap
+        flags = self._active_flags
+        while self.cycle < max_cycles:
+            evq.pop_ready(self.cycle)
+            if self.retired == self.launched and not self.pending:
+                break
+            progressed = False
+            if heap:
+                snapshot = []
+                while heap:                 # ascending sm id
+                    sid = heappop(heap)
+                    flags[sid] = 0
+                    snapshot.append(sid)
+                for sid in snapshot:
+                    sm = sms[sid]
+                    if sm._ready:
+                        if sm.step(self.cycle):
+                            progressed = True
+                            sm.issue_cycles += 1
+                        if sm._ready and not flags[sid]:
+                            flags[sid] = 1
+                            heappush(heap, sid)
+            if progressed:
+                self.cycle += 1
+                continue
+            nxt = evq.next_cycle()
+            if nxt is None:
+                # no issuable thread, no pending event: nothing can ever
+                # make progress again (busy sleepers hold queue timers)
+                self.deadlocked = self.retired < self.launched
+                break
+            self.cycle = max(self.cycle + 1, nxt)
         return self.stats()
 
     # ------------------------------------------------------------------

@@ -27,31 +27,70 @@ from repro.core.machine import GPUMachine
 
 
 class EventQueue:
-    """Shared simulation event heap: (cycle, seq, fn, args)."""
+    """Shared simulation event queue, bucketed by cycle.
+
+    Events land in per-cycle lists with a heap holding one entry per
+    *distinct* pending cycle, so the common case — many completions at the
+    same cycle — costs a list append instead of a heap sift.  Same-cycle
+    events fire in push order, which is exactly the ``(cycle, seq)`` order
+    the previous flat heap produced; callbacks that push new events at the
+    cycle currently draining are picked up within the same drain (the flat
+    heap's ``<= cycle`` semantics).
+
+    ``wake_at`` is the coalesced timer-wake primitive: no matter how many
+    threads park on the same ``(cycle, waker)``, exactly one event fires —
+    ``waker(cycle)`` — letting a scheduler park whole groups of
+    ``busy_until`` threads on one targeted timer instead of one broadcast
+    wake per thread.
+    """
 
     def __init__(self):
-        self._h: List = []
-        self._seq = 0
+        self._h: List[int] = []          # pending cycles (one entry each)
+        self._buckets: Dict[int, list] = {}
         self.now = 0            # cycle of the event currently executing
         self.popped = 0         # total events executed (sim throughput stat)
+        self._wakes: set = set()         # live (cycle, waker) timer keys
 
     def push(self, cycle: int, fn: Callable, *args):
-        heapq.heappush(self._h, (cycle, self._seq, fn, args))
-        self._seq += 1
+        b = self._buckets.get(cycle)
+        if b is None:
+            self._buckets[cycle] = b = []
+            heapq.heappush(self._h, cycle)
+        b.append((fn, args))
+
+    def wake_at(self, cycle: int, waker: Callable):
+        """Schedule ``waker(cycle)`` at ``cycle``, coalescing duplicates:
+        repeated requests for the same (cycle, waker) are one event."""
+        key = (cycle, waker)
+        if key in self._wakes:
+            return
+        self._wakes.add(key)
+        self.push(cycle, self._fire_wake, key)
+
+    def _fire_wake(self, key):
+        self._wakes.discard(key)
+        key[1](key[0])
 
     def pop_ready(self, cycle: int):
         h = self._h
-        while h and h[0][0] <= cycle:
-            t, _, fn, args = heapq.heappop(h)
+        buckets = self._buckets
+        while h and h[0] <= cycle:
+            t = heapq.heappop(h)
             self.now = t
-            self.popped += 1
-            fn(*args)
+            lst = buckets[t]
+            i = 0
+            while i < len(lst):     # callbacks may append to this bucket
+                fn, args = lst[i]
+                i += 1
+                fn(*args)
+            self.popped += i
+            del buckets[t]
 
     def next_cycle(self) -> Optional[int]:
-        return self._h[0][0] if self._h else None
+        return self._h[0] if self._h else None
 
     def __len__(self):
-        return len(self._h)
+        return sum(len(b) for b in self._buckets.values())
 
 
 class DRAM:
@@ -222,37 +261,169 @@ class LRC:
     def __init__(self, cfg: GPUMachine, l2: L2Cache):
         self.cfg = cfg
         self.l2 = l2
-        self.pending: Dict[Tuple[int, int], List[Callable]] = {}
+        # key -> single waiter callable, promoted to a list on first merge
+        # (the single-waiter case is ~all of them; skipping the list saves
+        # an allocation per line on the hot path)
+        self.pending: Dict[Tuple[int, int], object] = {}
         self.merged = 0
+        # line -> (home slice, home partition, mirror slice), lazily built:
+        # the slice hash and partition of a line never change, so the hot
+        # path pays one dict hit instead of recomputing hash + partition
+        self._meta: Dict[int, tuple] = {}
+        # machine constants hoisted off cfg: read once per request, not via
+        # an attribute chain
+        self._enabled = cfg.lrc_enabled
+        self._near = cfg.l2_near_latency
+        self._far = cfg.l2_far_latency
+        self._rc = cfg.remote_copy
+        self._rc_thresh = cfg.rc_occupancy_threshold
+        self._rc_prob = cfg.rc_max_prob
+        self._half_sms = cfg.num_sms // 2
 
     def request(self, cycle: int, line_addr: int, sm_id: int, cb: Callable,
                 write: bool = False):
         self.request_many(cycle, (line_addr,), sm_id, cb, write)
 
+    def _line_meta(self, line_addr: int):
+        l2 = self.l2
+        s = l2.slice_of(line_addr)
+        m = (l2.slices[s], 0 if s < l2.n // 2 else 1,
+             l2.slices[(s + l2.n // 2) % l2.n])
+        self._meta[line_addr] = m
+        return m
+
     def request_many(self, cycle: int, lines, sm_id: int, cb: Callable,
                      write: bool = False):
         """Batch entry point: one call per TMA issue cycle, one shared ``cb``
-        invoked once per completed line (the engine's per-job counter)."""
-        if not self.cfg.lrc_enabled or write:
+        invoked once per completed line (the engine's per-job counter).
+
+        The read path inlines the L2 hit handling (including the RemoteCopy
+        mirror probe, preserving the exact RNG draw sequence) so the
+        steady-state K/V re-stream — an L2 hit per line — costs a couple of
+        dict probes and a bucket append instead of the full
+        ``L2Cache.access`` call chain.  Misses, MSHR pressure and stalled
+        slices fall back to the unfused slow path."""
+        if not self._enabled or write:
             l2 = self.l2
             for line_addr in lines:
                 l2.access(cycle, line_addr, sm_id, cb, write)
             return
+        l2 = self.l2
         pending = self.pending
+        meta = self._meta
+        evq = l2.evq
+        fanout = self._fanout
         pair = sm_id // 2
+        req_part = 0 if sm_id < self._half_sms else 1
+        rc = self._rc
+        near_lat = self._near
+        far_lat = self._far
+        rc_thresh = self._rc_thresh
+        rc_prob = self._rc_prob
+        rng = l2.rng.random
         for line_addr in lines:
             key = (pair, line_addr)
             waiters = pending.get(key)
             if waiters is not None:
                 self.merged += 1
-                waiters.append(cb)
+                if waiters.__class__ is list:
+                    waiters.append(cb)
+                else:
+                    pending[key] = [waiters, cb]
                 continue
-            pending[key] = [cb]
-            self.l2.access(cycle, line_addr, sm_id,
-                           partial(self._fanout, key))
+            pending[key] = cb
+            l2.requests += 1
+            m = meta.get(line_addr)
+            if m is None:
+                m = self._line_meta(line_addr)
+            sl, home_part, mirror = m
+            if home_part == req_part:                       # near access
+                if not sl.stalled and line_addr in sl.tags:
+                    sl.hits += 1
+                    sl.tags.move_to_end(line_addr)
+                    evq.push(cycle + near_lat, fanout, key)
+                    continue
+                sl.access(cycle, line_addr, False, partial(fanout, key))
+                continue
+            if rc:                     # far read: RemoteCopy proxy (§4.3)
+                mtags = mirror.tags
+                if line_addr in mtags:
+                    mirror.hits += 1
+                    mtags.move_to_end(line_addr)
+                    evq.push(cycle + near_lat, fanout, key)
+                    continue
+                if (line_addr in sl.tags
+                        and mirror.occupancy < rc_thresh
+                        and rng() < rc_prob):
+                    mirror._insert(line_addr)
+                    mirror.rc_inserts += 1
+            if not sl.stalled and line_addr in sl.tags:
+                sl.hits += 1
+                sl.tags.move_to_end(line_addr)
+                evq.push(cycle + far_lat, fanout, key)
+                continue
+            sl.access(cycle, line_addr, True, partial(fanout, key))
+
+    def request_one(self, cycle: int, line_addr: int, sm_id: int,
+                    cb: Callable, write: bool = False):
+        """Single-line fast entry — the TMA engines' targeted-refill path
+        (one replacement line per completed line, see engine.TMAEngine)."""
+        if not self._enabled or write:
+            self.l2.access(cycle, line_addr, sm_id, cb, write)
+            return
+        key = (sm_id // 2, line_addr)
+        pending = self.pending
+        waiters = pending.get(key)
+        if waiters is not None:
+            self.merged += 1
+            if waiters.__class__ is list:
+                waiters.append(cb)
+            else:
+                pending[key] = [waiters, cb]
+            return
+        pending[key] = cb
+        l2 = self.l2
+        l2.requests += 1
+        m = self._meta.get(line_addr)
+        if m is None:
+            m = self._line_meta(line_addr)
+        sl, home_part, mirror = m
+        fanout = self._fanout
+        if home_part == (0 if sm_id < self._half_sms else 1):
+            if not sl.stalled and line_addr in sl.tags:
+                sl.hits += 1
+                sl.tags.move_to_end(line_addr)
+                l2.evq.push(cycle + self._near, fanout, key)
+                return
+            sl.access(cycle, line_addr, False, partial(fanout, key))
+            return
+        if self._rc:
+            mtags = mirror.tags
+            if line_addr in mtags:
+                mirror.hits += 1
+                mtags.move_to_end(line_addr)
+                l2.evq.push(cycle + self._near, fanout, key)
+                return
+            if (line_addr in sl.tags
+                    and mirror.occupancy < self._rc_thresh
+                    and l2.rng.random() < self._rc_prob):
+                mirror._insert(line_addr)
+                mirror.rc_inserts += 1
+        if not sl.stalled and line_addr in sl.tags:
+            sl.hits += 1
+            sl.tags.move_to_end(line_addr)
+            l2.evq.push(cycle + self._far, fanout, key)
+            return
+        sl.access(cycle, line_addr, True, partial(fanout, key))
 
     def _fanout(self, key):
-        for w in self.pending.pop(key, ()):
+        w = self.pending.pop(key, None)
+        if w is None:
+            return
+        if w.__class__ is list:
+            for f in w:
+                f()
+        else:
             w()
 
 
@@ -271,6 +442,8 @@ class DirectHBM:
                 write: bool = False):
         self.requests += 1
         self.dram.access(cycle, line_addr, cb)
+
+    request_one = request
 
     def request_many(self, cycle: int, lines, sm_id: int, cb: Callable,
                      write: bool = False):

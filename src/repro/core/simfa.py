@@ -72,7 +72,8 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     """Simulate one kernel launch (name kept for history; ``kernel=``
     dispatches through the registry, defaulting to the FA3 ping-pong the
     driver originally hardcoded).  ``tiling=None`` takes the spec's
-    default tiling."""
+    default tiling.  ``engine_opts`` forwards to :class:`Engine` — e.g.
+    ``{"scheduler": "waiter"}`` to pin a fallback scheduler."""
     spec = kernel_registry.get(kernel)
     tiling = tiling if tiling is not None else spec.default_tiling()
     # total CTA count is analytic; only the traces we will actually run are

@@ -21,7 +21,7 @@ from repro.configs import registry
 from repro.configs.base import SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch import specs as specs_lib
-from repro.utils.hlo import collective_bytes, hlo_cost
+from repro.utils.hlo import collective_bytes, hlo_cost, xla_cost_analysis
 
 OUT_DEFAULT = "results/dryrun.json"
 
@@ -40,7 +40,7 @@ def run_cell(cfg, shape, mesh, mesh_kind: str, plan=None) -> dict:
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     # XLA's cost_analysis counts while-loop (scan) bodies ONCE; hlo_cost

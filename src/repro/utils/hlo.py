@@ -34,6 +34,16 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts (per partition), newer ones
+    return the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_RE = re.compile(r"^\s*%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
 
@@ -220,15 +230,25 @@ def _parse_computation(lines: List[str]):
     return symbols, instrs
 
 
+# lhs operand of a dot: either 'dot(%name, ...' (bare refs) or the typed
+# form current XLA prints, 'dot(f32[128,256]{1,0} %name, ...' — capture the
+# optional inline shape and the name
+_DOT_LHS_RE = re.compile(
+    r"dot\(\s*(?:(\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+)?%?([\w\.\-]+)")
+
+
 def _dot_flops(shape: str, line: str, symbols: Dict[str, str]) -> float:
     """2 * result_elems * prod(lhs contracting dims)."""
     res_elems = 1
     for d in _shape_dims(shape):
         res_elems *= d
-    mo = re.search(r"dot\(%?([\w\.\-]+)", line)
+    mo = _DOT_LHS_RE.search(line)
     if not mo:
         return 0.0
-    lhs_dims = _shape_dims(symbols.get(mo.group(1), ""))
+    # inline operand shape (typed operands) beats the symbol table; with
+    # bare refs the shape comes from the producing instruction
+    lhs_shape = mo.group(1) or symbols.get(mo.group(2), "")
+    lhs_dims = _shape_dims(lhs_shape)
     k = 1
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     if mc and mc.group(1):

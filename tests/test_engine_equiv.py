@@ -1,15 +1,20 @@
-"""Waiter-indexed scheduler vs. broadcast-fallback equivalence (PR 4).
+"""Scheduler equivalence: event-driven vs. waiter-indexed vs. broadcast.
 
-The cycle engine schedules with condition-indexed waiter lists; the legacy
-broadcast scheduler (wake-everything-and-rescan) survives behind
-``Engine(broadcast_wake=True)`` as a deadlock-safety fallback.  Both must be
+The cycle engine's default run loop is discrete-event (PR 6): per-SM
+issue-eligible ready queues, coalesced busy-timer wakes, and straight jumps
+to the next interesting cycle.  The condition-indexed waiter scheduler
+(PR 4) and the legacy broadcast scheduler (wake-everything-and-rescan)
+survive behind ``Engine(scheduler="waiter")`` / ``Engine(scheduler=
+"broadcast")`` (= ``broadcast_wake=True``) as fallbacks.  All three must be
 *bit-exact*: identical ``Engine.stats()`` dicts and identical
 :class:`EventTracer` event streams, across a grid of workload/machine
-configs, including a deadlock case (both flag ``deadlocked``, neither hangs).
+configs and all four registered kernel programs, including deadlock cases
+(every mode flags ``deadlocked``, none hangs).
 
 The GOLD values double as a regression anchor: ``cycles``, ``dram_bytes``,
 ``l2_req_bytes`` and ``tma_lines`` were captured from the pre-refactor
-broadcast engine on this grid and must never drift.
+broadcast engine on this grid and must never drift.  The full-fidelity FA3
+reference launch is separately pinned at 73614 cycles.
 """
 import pytest
 
@@ -21,6 +26,8 @@ from repro.core.kprog import registry
 from repro.core.machine import H800, h800_variant
 from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
 from repro.analysis.events import EventTracer
+
+SCHEDULERS = ("event", "waiter", "broadcast")
 
 # name -> (machine, n_sms, workload kwargs)
 CONFIGS = {
@@ -47,8 +54,18 @@ GOLD = {
             "tma_lines": 2880, "tc_busy_cycles": 9216, "events": 852},
 }
 
+# the reference full-fidelity FA3 launch (BENCH_engine "full"): pinned
+FULL_ANCHOR = {"cycles": 73614, "dram_bytes": 4194304,
+               "l2_req_bytes": 31705728, "tma_lines": 565248}
 
-def _run(name, broadcast):
+
+def _events(tracer):
+    return [(e.eid, e.kind, e.op, e.sm, e.cta, e.wg, e.tag, e.t0, e.t1,
+             e.t_done, e.sid, e.gid, e.bid, e.dep_n, e.fixed, e.src)
+            for e in tracer.events]
+
+
+def _run(name, scheduler):
     cfg, n_sms, kw = CONFIGS[name]
     kw = dict(kw)
     tiling = kw.pop("tiling", FA3Tiling())
@@ -56,30 +73,29 @@ def _run(name, broadcast):
     ctas, tmaps = fa3_kernel_ctas(cfg, tiling=tiling, causal=causal, **kw)
     tracer = EventTracer()
     eng = Engine(cfg, n_sms=n_sms, mem_scale=n_sms / cfg.num_sms,
-                 tracer=tracer, broadcast_wake=broadcast)
+                 tracer=tracer, scheduler=scheduler)
     for tm in tmaps.values():
         eng.define_tmap(tm)
     eng.launch(ctas)
     st = eng.run()
-    events = [(e.eid, e.kind, e.op, e.sm, e.cta, e.wg, e.tag, e.t0, e.t1,
-               e.t_done, e.sid, e.gid, e.bid, e.dep_n, e.fixed, e.src)
-              for e in tracer.events]
-    return eng, st, events
+    return eng, st, _events(tracer)
 
 
 @pytest.mark.parametrize("name", sorted(CONFIGS))
-def test_waiter_equals_broadcast(name):
-    """Both schedulers: identical stats dicts and identical event streams."""
-    eng_w, st_w, ev_w = _run(name, broadcast=False)
-    eng_b, st_b, ev_b = _run(name, broadcast=True)
-    assert st_w == st_b
-    assert ev_w == ev_b
-    assert eng_w.deadlocked == eng_b.deadlocked is False
+def test_schedulers_bit_exact(name):
+    """All three schedulers: identical stats dicts and event streams."""
+    eng_e, st_e, ev_e = _run(name, "event")
+    assert eng_e.deadlocked is False
+    for fallback in ("waiter", "broadcast"):
+        eng_f, st_f, ev_f = _run(name, fallback)
+        assert st_e == st_f, f"stats diverge: event vs {fallback}"
+        assert ev_e == ev_f, f"event stream diverges: event vs {fallback}"
+        assert eng_f.deadlocked is False
 
 
 @pytest.mark.parametrize("name", sorted(CONFIGS))
 def test_stats_match_pre_refactor_gold(name):
-    _, st, ev = _run(name, broadcast=False)
+    _, st, ev = _run(name, "event")
     gold = GOLD[name]
     got = {k: st[k] for k in ("cycles", "dram_bytes", "l2_req_bytes",
                               "tma_lines", "tc_busy_cycles")}
@@ -87,10 +103,40 @@ def test_stats_match_pre_refactor_gold(name):
     assert got == gold
 
 
-# kernel-spec grid: the three post-IR scenarios, lowered through the
+def test_broadcast_wake_flag_still_selects_broadcast():
+    """Back-compat: ``broadcast_wake=True`` is the broadcast scheduler."""
+    eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=True)
+    assert eng.scheduler == "broadcast"
+    assert eng.broadcast_wake is True
+    with pytest.raises(ValueError):
+        Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=True,
+               scheduler="event")
+    with pytest.raises(ValueError):
+        Engine(H800, n_sms=1, mem_scale=1.0, scheduler="nonsense")
+
+
+def test_fa3_reference_anchor_73614():
+    """The full-fidelity reference FA3 launch (all 132 SMs, 64 CTAs) under
+    the default event scheduler: cycle count and traffic pinned forever."""
+    w = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **w)
+    eng = Engine(H800)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    assert eng.scheduler == "event"     # the default
+    got = {k: st[k] for k in FULL_ANCHOR}
+    assert got == FULL_ANCHOR
+
+
+# kernel-program grid: all four registered kernels, lowered through the
 # registry, must also be scheduler-bit-exact (kernel -> machine, n_sms,
 # workload, tiling)
 KERNEL_CONFIGS = {
+    "fa3": (H800, 4,
+            AttnWorkload(name="p", B=1, L=256, S=512, H_kv=1, G=2, D=128),
+            None),
     "fa3_cooperative": (h800_variant(num_sms=4), 4,
                         AttnWorkload(name="c", B=1, L=256, S=512, H_kv=1,
                                      G=2, D=128), None),
@@ -103,29 +149,28 @@ KERNEL_CONFIGS = {
 }
 
 
-def _run_kernel(name, broadcast):
+def _run_kernel(name, scheduler):
     cfg, n_sms, w, tiling = KERNEL_CONFIGS[name]
     ctas, tmaps = registry.get(name).build(cfg, w, tiling=tiling)
     tracer = EventTracer()
     eng = Engine(cfg, n_sms=n_sms, mem_scale=n_sms / cfg.num_sms,
-                 tracer=tracer, broadcast_wake=broadcast)
+                 tracer=tracer, scheduler=scheduler)
     for tm in tmaps.values():
         eng.define_tmap(tm)
     eng.launch(ctas)
     st = eng.run()
-    events = [(e.eid, e.kind, e.op, e.sm, e.cta, e.wg, e.tag, e.t0, e.t1,
-               e.t_done, e.sid, e.gid, e.bid, e.dep_n, e.fixed, e.src)
-              for e in tracer.events]
-    return eng, st, events
+    return eng, st, _events(tracer)
 
 
 @pytest.mark.parametrize("name", sorted(KERNEL_CONFIGS))
-def test_waiter_equals_broadcast_on_kernel_specs(name):
-    eng_w, st_w, ev_w = _run_kernel(name, broadcast=False)
-    eng_b, st_b, ev_b = _run_kernel(name, broadcast=True)
-    assert st_w == st_b
-    assert ev_w == ev_b
-    assert eng_w.deadlocked == eng_b.deadlocked is False
+def test_schedulers_bit_exact_on_kernel_specs(name):
+    eng_e, st_e, ev_e = _run_kernel(name, "event")
+    assert eng_e.deadlocked is False
+    for fallback in ("waiter", "broadcast"):
+        eng_f, st_f, ev_f = _run_kernel(name, fallback)
+        assert st_e == st_f, f"stats diverge: event vs {fallback}"
+        assert ev_e == ev_f, f"event stream diverges: event vs {fallback}"
+        assert eng_f.deadlocked is False
 
 
 def test_decode_traffic_crosschecks_analytical_hook():
@@ -134,7 +179,7 @@ def test_decode_traffic_crosschecks_analytical_hook():
     name = "splitkv_decode"
     cfg, _, w, _ = KERNEL_CONFIGS[name]
     spec = registry.get(name)
-    _, st, _ = _run_kernel(name, broadcast=False)
+    _, st, _ = _run_kernel(name, "event")
     assert st["tma_lines"] * cfg.line_bytes == \
         pytest.approx(spec.l2_traffic(w), rel=0.05)
     assert st["dram_bytes"] == pytest.approx(
@@ -142,31 +187,31 @@ def test_decode_traffic_crosschecks_analytical_hook():
 
 
 def test_deadlock_flagged_identically():
-    """An un-signaled mbarrier wait must deadlock-flag in both modes, and
+    """An un-signaled mbarrier wait must deadlock-flag in every mode, and
     terminate immediately (no hang, no cycle burn)."""
-    for broadcast in (False, True):
-        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+    for scheduler in SCHEDULERS:
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, scheduler=scheduler)
         eng.launch([CTATrace(wgs=[[Instr(isa.MB_WAIT, sid=7)]],
                              n_consumers=1)])
         st = eng.run()
-        assert eng.deadlocked
-        assert st["cycles"] == 0
+        assert eng.deadlocked, scheduler
+        assert st["cycles"] == 0, scheduler
 
 
 def test_deadlock_after_progress():
     """Deadlock reached mid-pipeline (producer waits on a stage no consumer
-    releases): both modes agree on the flag and on the cycle it is hit."""
+    releases): every mode agrees on the flag and on the cycle it is hit."""
     results = {}
-    for broadcast in (False, True):
+    for scheduler in SCHEDULERS:
         prod = [Instr(isa.BUBBLES, cycles=100),
                 Instr(isa.ACQUIRE_STAGE, sid=0),
                 Instr(isa.ACQUIRE_STAGE, sid=0)]   # second acquire: no release
-        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, scheduler=scheduler)
         eng.launch([CTATrace(wgs=[prod], n_consumers=1)])
         st = eng.run()
-        results[broadcast] = (eng.deadlocked, st["cycles"])
-    assert results[False] == results[True]
-    assert results[False][0] is True
+        results[scheduler] = (eng.deadlocked, st["cycles"])
+    assert len(set(results.values())) == 1, results
+    assert results["event"][0] is True
 
 
 def test_group_wait_counters_track_dict_bookkeeping():
@@ -174,7 +219,7 @@ def test_group_wait_counters_track_dict_bookkeeping():
     including the ``g <= gid`` filter: a committed group with a *higher* id
     than the wait's gid must not block it (out-of-order gid commit)."""
     results = {}
-    for broadcast in (False, True):
+    for scheduler in SCHEDULERS:
         tr = []
         # commit high group first, then a low one; wait only on the low id
         for gid in (5, 1):
@@ -183,10 +228,10 @@ def test_group_wait_counters_track_dict_bookkeeping():
             tr.append(Instr(isa.WGMMA_COMMIT, gid=gid))
         tr.append(Instr(isa.WGMMA_WAIT, gid=1, n=0))   # ignores group 5
         tr.append(Instr(isa.WGMMA_WAIT, gid=5, n=0))   # drain everything
-        eng = Engine(H800, n_sms=1, mem_scale=1.0, broadcast_wake=broadcast)
+        eng = Engine(H800, n_sms=1, mem_scale=1.0, scheduler=scheduler)
         eng.launch([CTATrace(wgs=[tr], n_consumers=1)])
         st = eng.run()
         assert not eng.deadlocked
         assert st["tc_busy_cycles"] == 6 * 64
-        results[broadcast] = st
-    assert results[False] == results[True]
+        results[scheduler] = st
+    assert results["event"] == results["waiter"] == results["broadcast"]
