@@ -23,7 +23,15 @@ engine's throughput over the life of the repo stays inspectable.
 committed baseline's smoke row: simulated cycle count must match exactly
 (correctness side) and cycles/s must be neither far below the baseline
 (perf regression) nor absurdly above it (the workload stopped simulating
-what it used to).  It writes nothing.
+what it used to).  The perf floor is *like-for-like*: when the run's
+manifest matches the committed baseline's host fingerprint, the counters-
+off floor tightens to ``SMOKE_STRICT_MIN_RATIO`` (the observability layer
+must stay near-zero-cost when off); on a different host only the wide
+legacy band applies — absolute cycles/s across unlike hosts gate nothing.
+``--smoke`` also reruns the tiny workload with the PM-counter sink + event
+tracer attached, asserts bit-identical simulation, and (with
+``--trace-out``) exports the reference Perfetto trace CI uploads as an
+artifact.  It writes nothing else.
 """
 from __future__ import annotations
 
@@ -38,6 +46,8 @@ from repro.configs.llama3 import AttnWorkload
 from repro.core.engine import Engine
 from repro.core.machine import H800
 from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
+from repro.obs import (CounterSink, build_manifest, export_trace, same_host,
+                       subsystem_wall_breakdown)
 
 from benchmarks.common import Sink, maybe_profile
 
@@ -66,6 +76,11 @@ ROW_SCHEMA = ("workload", "wall_s", "sim_cycles", "cycles_per_s",
 # large means the simulated workload shrank, not that the engine got fast).
 SMOKE_MIN_RATIO = 0.4
 SMOKE_MAX_RATIO = 8.0
+# Like-for-like floor: when the manifest host fingerprint matches the
+# committed baseline's, the counters-off run must stay within 5% of the
+# recorded cycles/s — the observability hooks' "near-zero-cost when off"
+# contract, actually enforced.  Never applied across unlike hosts.
+SMOKE_STRICT_MIN_RATIO = 0.95
 
 # One-time measurement of the pre-refactor (PR<4) broadcast engine on the
 # "full" workload, taken on the baseline machine when this bench was
@@ -78,20 +93,32 @@ PRE_REFACTOR_FULL_WALL_S = 18.8
 EQUIV_KEYS = ("sim_cycles", "dram_bytes", "l2_req_bytes", "tma_lines")
 
 
-def _measure(w: AttnWorkload, scheduler: str = "event") -> dict:
+def _measure(w: AttnWorkload, scheduler: str = "event",
+             counters=None, tracer=None, repeats: int = 1) -> dict:
+    """One benchmark row.  ``repeats > 1`` re-runs the simulation on fresh
+    engines and keeps the fastest wall time — the smoke workload is ~30 ms,
+    where single-shot CPython jitter swamps the 5% strict gate; best-of-N
+    maxima are stable enough to compare across runs on the same host."""
     cfg = H800
     tiling = FA3Tiling()
     total = w.B * w.H_kv * w.G * math.ceil(w.L / tiling.t_m)
     ctas, tmaps = fa3_kernel_ctas(
         cfg, B=w.B, H_kv=w.H_kv, G=w.G, L=w.L, S=w.S, D=w.D, tiling=tiling,
         causal=w.causal, max_ctas=total)
-    eng = Engine(cfg, scheduler=scheduler)
-    for tm in tmaps.values():
-        eng.define_tmap(tm)
-    t0 = time.perf_counter()
-    eng.launch(ctas)
-    st = eng.run()
-    wall = time.perf_counter() - t0
+    wall = math.inf
+    for _ in range(max(1, repeats)):
+        if counters is not None:
+            counters.__init__(window=counters.window)   # fresh sample series
+        if tracer is not None:
+            tracer.__init__()
+        eng = Engine(cfg, scheduler=scheduler, counters=counters,
+                     tracer=tracer)
+        for tm in tmaps.values():
+            eng.define_tmap(tm)
+        t0 = time.perf_counter()
+        eng.launch(ctas)
+        st = eng.run()
+        wall = min(wall, time.perf_counter() - t0)
     return {
         "workload": w.name,
         "wall_s": round(wall, 4),
@@ -100,9 +127,15 @@ def _measure(w: AttnWorkload, scheduler: str = "event") -> dict:
         "events_per_s": round(eng.evq.popped / wall, 1),
         "n_ctas": len(ctas),
         "scheduler": scheduler,
+        "counters": counters is not None,
         "dram_bytes": st["dram_bytes"],
         "l2_req_bytes": st["l2_req_bytes"],
         "tma_lines": st["tma_lines"],
+        "manifest": build_manifest(
+            machine=cfg, workload=w, kernel="fa3", tiling=tiling,
+            scheduler=scheduler, wall_s=wall, sim_cycles=st["cycles"],
+            events_popped=eng.evq.popped,
+            counter_window=counters.window if counters is not None else None),
     }
 
 
@@ -120,36 +153,88 @@ def load_baseline() -> dict:
     return {}
 
 
-def smoke_gate(row: dict, baseline: dict) -> None:
+def smoke_gate(row: dict, baseline: dict, remeasure=None) -> None:
     """Two-sided CI gate: exact simulated-cycle match + bounded cycles/s
-    ratio vs. the committed baseline's smoke row."""
+    ratio vs. the committed baseline's smoke row.
+
+    The perf floor compares like-for-like: the strict counters-off
+    ``SMOKE_STRICT_MIN_RATIO`` floor applies only when this run's manifest
+    host fingerprint equals the committed baseline row's (same host class,
+    rates comparable); otherwise — unlike host, counters-on run, or a
+    pre-manifest legacy baseline — only the wide [MIN, MAX] band gates.
+
+    A strict-floor miss is retried through ``remeasure`` (a fresh
+    best-of-N measurement, taken after a pause) before failing: shared CI
+    hosts have multi-second CPU-contention phases that depress any single
+    wall-clock sample far more than 5%, while a real hook-cost regression
+    reproduces on every retry."""
     base_row = next((r for r in baseline.get("rows", [])
-                     if r.get("workload") == "smoke"), None)
+                     if r.get("workload") == "smoke"
+                     and not r.get("counters")), None)
     if base_row is None:
         return      # no committed smoke row yet: schema validation only
-    assert row["sim_cycles"] == base_row["sim_cycles"], (
-        f"smoke sim_cycles drifted: {row['sim_cycles']} != committed "
-        f"{base_row['sim_cycles']} — the engine changed behavior")
-    ratio = row["cycles_per_s"] / base_row["cycles_per_s"]
-    assert ratio >= SMOKE_MIN_RATIO, (
+    for attempt in range(3):
+        assert row["sim_cycles"] == base_row["sim_cycles"], (
+            f"smoke sim_cycles drifted: {row['sim_cycles']} != committed "
+            f"{base_row['sim_cycles']} — the engine changed behavior")
+        ratio = row["cycles_per_s"] / base_row["cycles_per_s"]
+        like_for_like = (not row.get("counters")
+                         and same_host(row.get("manifest"),
+                                       base_row.get("manifest")))
+        floor = SMOKE_STRICT_MIN_RATIO if like_for_like \
+            else SMOKE_MIN_RATIO
+        if ratio >= floor or remeasure is None or not like_for_like \
+                or attempt == 2:
+            break
+        time.sleep(1.0)         # escape a transient contention phase
+        row = remeasure()
+    assert ratio >= floor, (
         f"engine throughput regression: smoke cycles/s at {ratio:.2f}x of "
         f"committed baseline ({row['cycles_per_s']:.0f} vs "
-        f"{base_row['cycles_per_s']:.0f}; floor {SMOKE_MIN_RATIO}x)")
+        f"{base_row['cycles_per_s']:.0f}; floor {floor}x"
+        + (", like-for-like host" if like_for_like else "") + ")")
     assert ratio <= SMOKE_MAX_RATIO, (
         f"smoke cycles/s at {ratio:.2f}x of committed baseline — too fast "
         f"to be the same simulation (cap {SMOKE_MAX_RATIO}x); re-baseline "
         f"deliberately if this is a real engine speedup")
 
 
-def run(sink: Sink, smoke: bool = False, profile: bool = False):
+def run(sink: Sink, smoke: bool = False, profile: bool = False,
+        trace_out: str = ""):
     names = ["smoke"] if smoke else ["smoke", "small", "medium", "full"]
     rows = []
     with maybe_profile(profile):
         for name in names:
-            row = _measure(WORKLOADS[name])
+            # the smoke row feeds the strict 5% gate: best-of-5 on both
+            # the baseline-writing and gating sides (see _measure)
+            row = _measure(WORKLOADS[name],
+                           repeats=5 if name == "smoke" else 1)
             validate_row(row)
             rows.append(row)
             sink.row(**row)
+    if smoke:
+        # counters-on rerun: the sink must be bit-neutral (identical
+        # simulation) and its overhead visible; optionally export the
+        # reference Perfetto trace CI keeps as an artifact
+        from repro.analysis.events import EventTracer
+        off = rows[0]
+        snk, tracer = CounterSink(), EventTracer()
+        on = _measure(WORKLOADS["smoke"], counters=snk, tracer=tracer,
+                      repeats=5)
+        validate_row(on)
+        for key in EQUIV_KEYS:
+            assert off[key] == on[key], (
+                f"counter sink is not bit-neutral on {key}: "
+                f"{off[key]} != {on[key]}")
+        assert len(snk.cycles) > 1, "counter sink never sampled"
+        rows.append(on)
+        sink.row(**on)
+        sink.derive(counters_overhead_pct=round(
+            100.0 * (off["cycles_per_s"] / on["cycles_per_s"] - 1.0), 1))
+        if trace_out:
+            export_trace(trace_out, tracer, snk, on["manifest"],
+                         name="bench-engine smoke (fa3)")
+            print(f"  reference trace written: {trace_out}", flush=True)
     if not smoke:
         # waiter + broadcast fallbacks on the reference launch: each
         # scheduler generation's speedup, re-measurable on any machine
@@ -164,6 +249,11 @@ def run(sink: Sink, smoke: bool = False, profile: bool = False):
                     f"scheduler equivalence broken on {key} (event vs "
                     f"{sched}): {event[key]} != {c[key]}")
         waiter, broadcast = comparators
+        # host-side wall split by subsystem (cProfile self-time aggregated
+        # by module): the reproducible backing for docs/performance.md's
+        # "where does the wall go" claims — one profiled full run
+        _, breakdown = subsystem_wall_breakdown(_measure, WORKLOADS["full"])
+        total_bd = sum(breakdown.values()) or 1.0
         sink.derive(
             speedup_vs_waiter=round(waiter["wall_s"] / event["wall_s"], 2),
             speedup_vs_broadcast=round(
@@ -172,6 +262,9 @@ def run(sink: Sink, smoke: bool = False, profile: bool = False):
                 PRE_REFACTOR_FULL_WALL_S / event["wall_s"], 2),
             pre_refactor_full_wall_s=PRE_REFACTOR_FULL_WALL_S,
             full_cycles_per_s=event["cycles_per_s"],
+            wall_breakdown_full=breakdown,
+            wall_breakdown_pct={k: round(100.0 * v / total_bd, 1)
+                                for k, v in breakdown.items()},
         )
         rows.extend(comparators)
     return rows
@@ -231,14 +324,18 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny workload only; two-sided gate vs. committed "
-                         "baseline; write nothing")
+                    help="tiny workload only (counters off + on); gate vs. "
+                         "committed baseline; write nothing")
     ap.add_argument("--profile", action="store_true",
                     help="cProfile the simulation and dump the top 20")
+    ap.add_argument("--trace-out", default="",
+                    help="(--smoke) export the counters-on reference "
+                         "Perfetto trace to this path (CI artifact)")
     args = ap.parse_args()
 
     sink = Sink("engine")
-    rows = run(sink, smoke=args.smoke, profile=args.profile)
+    rows = run(sink, smoke=args.smoke, profile=args.profile,
+               trace_out=args.trace_out)
     if not args.smoke:
         sink.finish()
         write_baseline(sink, rows)
@@ -246,9 +343,14 @@ if __name__ == "__main__":
         print(sink.derived)
     else:
         # CI guard: completed + schema-valid + two-sided baseline gate
+        # (strict like-for-like floor on the counters-off row, with
+        # contention-phase retries)
         baseline = load_baseline()
         for row in rows:
             validate_row(row)
-            smoke_gate(row, baseline)
+            remeasure = None
+            if not row.get("counters"):
+                remeasure = lambda: _measure(WORKLOADS["smoke"], repeats=5)
+            smoke_gate(row, baseline, remeasure=remeasure)
         print("smoke ok:", json.dumps(rows))
     sys.exit(0)

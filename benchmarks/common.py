@@ -68,6 +68,12 @@ class Sink:
 def _fmt(v):
     if isinstance(v, float):
         return f"{v:.4g}"
+    if isinstance(v, dict):
+        # provenance manifests ride along on bench rows; keep the CSV
+        # stream readable with just the identity bits
+        if "git_sha" in v and "host_id" in v:
+            return f"{v['git_sha']}@{v['host_id']}"
+        return json.dumps(v, sort_keys=True)
     return v
 
 

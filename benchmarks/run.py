@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import traceback
 
 from benchmarks.common import Sink, maybe_profile
@@ -53,6 +54,12 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="cProfile each bench and dump the top 20 by "
                          "cumulative time (see benchmarks/common.py)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="forwarded to benches that accept it (engine: tiny "
+                         "workload + counters-on bit-neutrality gate)")
+    ap.add_argument("--trace-out", default="",
+                    help="forwarded to benches that accept it (engine "
+                         "--smoke: reference Perfetto trace path)")
     args = ap.parse_args(argv)
 
     names = list(BENCHES)
@@ -68,8 +75,13 @@ def main(argv=None) -> int:
         sink = Sink(name)
         try:
             mod = importlib.import_module(f"benchmarks.bench_{name}")
+            # forward opt-in flags only to benches whose run() accepts them
+            accepted = inspect.signature(mod.run).parameters
+            kw = {k: v for k, v in
+                  (("smoke", args.smoke), ("trace_out", args.trace_out))
+                  if v and k in accepted}
             with maybe_profile(args.profile):
-                mod.run(sink)
+                mod.run(sink, **kw)
             out = sink.finish()
             summaries.append((name, out["wall_s"], out["derived"]))
             print(f"--- {name} ok ({out['wall_s']}s) "

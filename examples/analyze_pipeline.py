@@ -13,12 +13,15 @@ questions the flat gantt chart could not answer:
         --model 8B --seqlen 2048 --knob tma_bw=2 --knob wgmma=1.5
     PYTHONPATH=src python examples/analyze_pipeline.py \
         --sweep tma_bw=0.5,1,2,4 --json results/whatif.json
+    PYTHONPATH=src python examples/analyze_pipeline.py \
+        --report --trace-out results/fa3.trace.json   # open in ui.perfetto.dev
 """
 from __future__ import annotations
 
 import argparse
 import json
 
+from repro import obs
 from repro.analysis import critical_path as cp
 from repro.analysis import dag as dag_mod
 from repro.analysis import report, whatif
@@ -57,6 +60,15 @@ def main():
     ap.add_argument("--top", type=int, default=8,
                     help="show the N widest-idle warpgroups (0 = all)")
     ap.add_argument("--json", default="", help="dump results to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Perfetto/Chrome trace_event JSON of the "
+                         "run (PipeEvents + counter tracks) to this path; "
+                         "open in ui.perfetto.dev")
+    ap.add_argument("--report", action="store_true",
+                    help="print the NCU-style section report (speed-of-"
+                         "light %%, occupancy, stall buckets)")
+    ap.add_argument("--counter-window", type=int, default=256,
+                    help="PM-counter sampling window in cycles")
     args = ap.parse_args()
 
     if args.kernel == "splitkv_decode":
@@ -70,10 +82,19 @@ def main():
                      causal=args.causal)
     print(f"simulating {w.name} ({args.kernel}) on {H800.name} "
           f"(fidelity={args.fidelity}) ...")
+    want_counters = bool(args.trace_out) or args.report
     res = simulate_fa3(w, H800, fidelity=args.fidelity, record_events=True,
+                       record_counters=want_counters,
+                       counter_window=args.counter_window,
                        kernel=args.kernel)
     print(f"  {res.cycles:.0f} cycles = {res.latency_us:.1f} us "
           f"({res.fidelity}, {len(res.trace.events)} events)\n")
+
+    if args.report:
+        rep_ncu = obs.build_report(res, H800, workload=w,
+                                   manifest=res.manifest)
+        print(obs.render_report(rep_ncu))
+        print()
 
     dag = dag_mod.build(res.trace.events, res.trace.dispatch_parent)
 
@@ -107,6 +128,11 @@ def main():
         rows = []
         print("(no what-if knobs given; try --knob tma_bw=0.5,1,2)")
 
+    if args.trace_out:
+        obs.export_trace(args.trace_out, res.trace, res.counters,
+                         res.manifest, name=f"{w.name} ({args.kernel})")
+        print(f"\nwrote {args.trace_out} (open in ui.perfetto.dev)")
+
     if args.json:
         report.save_json(args.json, {
             "workload": w.name, "kernel": args.kernel, "cycles": res.cycles,
@@ -114,7 +140,7 @@ def main():
                        "totals": rep.totals()},
             "critical_path_summary": summary,
             "whatif": rows,
-        })
+        }, manifest=res.manifest)
         print(f"\nwrote {args.json}")
 
 

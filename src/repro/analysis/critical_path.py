@@ -34,6 +34,9 @@ from typing import Dict, List, Tuple
 from repro.analysis.dag import DONE, END, PipelineDAG
 from repro.analysis.events import BUBBLE, ISSUE, MMA, TMA
 from repro.core import isa
+# label parsing lives in obs.labels (single source of truth for the
+# cta{i}/{role} convention); role_of is re-exported here for back-compat
+from repro.obs.labels import role_of  # noqa: F401
 
 BUCKETS = ("tma-wait", "wgmma-drain", "barrier-wait", "softmax-bubble",
            "scheduler")
@@ -104,15 +107,6 @@ def _release_to(dag: PipelineDAG, eid: int, succ: int) -> int:
 # stall attribution
 # ---------------------------------------------------------------------------
 
-def role_of(label: str) -> str:
-    """Declared role behind a warpgroup label: ``cta3/consumer1`` ->
-    ``consumer``.  Labels carry the kernel IR's role-instance names
-    (``producer``, ``consumer0``, ...; positional ``wg0`` only for traces
-    built outside the IR); the cta prefix and instance index are stripped
-    so buckets aggregate per declared role."""
-    role = label.rsplit("/", 1)[-1]
-    stripped = role.rstrip("0123456789")
-    return stripped if stripped else role
 
 
 @dataclass
@@ -222,3 +216,58 @@ def attribute_stalls(dag: PipelineDAG) -> StallReport:
         meta[label] = {"span": span, "busy": busy, "idle": span - busy,
                        "instrs": len(eids)}
     return StallReport(per_wg=per_wg, meta=meta, makespan=dag.makespan)
+
+
+# ---------------------------------------------------------------------------
+# stall timelines (the attribution above, resolved over cycle windows)
+# ---------------------------------------------------------------------------
+
+def _spread(acc: Dict[int, float], lo: int, hi: int, cycles: float,
+            window: int) -> None:
+    """Distribute ``cycles`` uniformly over the windows overlapped by
+    ``[lo, hi)`` (float apportionment at the boundary windows)."""
+    span = hi - lo
+    if span <= 0 or cycles <= 0:
+        return
+    w = lo - lo % window
+    while w < hi:
+        seg = min(hi, w + window) - max(lo, w)
+        if seg > 0:
+            acc[w] = acc.get(w, 0.0) + cycles * seg / span
+        w += window
+
+
+def stall_timeline(dag: PipelineDAG, window: int = 256
+                   ) -> Dict[str, Dict[str, Dict[int, float]]]:
+    """Per-warpgroup stall buckets resolved over ``window``-cycle windows:
+    ``label -> bucket -> {window_start: cycles}``.
+
+    The same walk as :func:`attribute_stalls`, but each bucketed wait
+    interval is spread over the windows it overlaps (uniformly within the
+    interval; each bucket's windowed values sum to its attribution total).
+    This is the PipeEvent-side counter timeline — the engine-sampled
+    counters (``obs.counters``) cover bandwidths/occupancy, this covers
+    *why lanes idled, when*."""
+    out: Dict[str, Dict[str, Dict[int, float]]] = {}
+    for label, eids in dag.threads.items():
+        acc: Dict[str, Dict[int, float]] = {}
+        for i, eid in enumerate(eids):
+            if i == 0:
+                continue
+            e = dag.events[eid]
+            prev_end = dag.events[eids[i - 1]].t1
+            gap = e.t0 - prev_end
+            if gap <= 0:
+                continue
+            wait = min(gap, max(0, dag.ready[eid] - prev_end))
+            sched = gap - wait
+            if wait:
+                for k, v in _bucket_split(dag, eid, prev_end,
+                                          prev_end + wait).items():
+                    _spread(acc.setdefault(k, {}), prev_end,
+                            prev_end + wait, v, window)
+            if sched:
+                _spread(acc.setdefault("scheduler", {}), prev_end + wait,
+                        e.t0, sched, window)
+        out[label] = acc
+    return out

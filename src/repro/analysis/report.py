@@ -73,11 +73,25 @@ def render_critical_path(dag, path: List[int], summary: Dict[str, int],
     return "\n".join(out)
 
 
-def save_json(path: str, obj) -> None:
+def save_json(path: str, obj, *, manifest=True) -> None:
+    """Write ``obj`` as JSON.  By default the payload is stamped with an
+    ``obs.manifest`` provenance manifest: dict payloads gain a
+    ``"manifest"`` key (unless they already carry one), list payloads are
+    wrapped as ``{"manifest": ..., "rows": [...]}``.  ``manifest=False``
+    writes the object verbatim; ``manifest=<dict>`` stamps a caller-built
+    manifest (e.g. a ``SimResult.manifest``) instead of a fresh one."""
     def default(o):
         if is_dataclass(o) and not isinstance(o, type):
             return asdict(o)
         raise TypeError(f"unserializable: {type(o)}")
+    if manifest is not False:
+        from repro.obs.manifest import build_manifest
+        stamp = manifest if isinstance(manifest, dict) else build_manifest()
+        if isinstance(obj, dict):
+            if "manifest" not in obj:
+                obj = {**obj, "manifest": stamp}
+        elif isinstance(obj, list):
+            obj = {"manifest": stamp, "rows": obj}
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)

@@ -11,6 +11,13 @@ pays for new points.
 Hierarchical-fidelity points record the first-wave engine; the replay ratio
 (predicted / measured wave makespan) is applied to the composed total, which
 keeps the wave-composition arithmetic of ``simulate_fa3`` intact.
+
+Cache files carry an ``obs.manifest`` provenance stamp (``{"manifest": ...,
+"rows": [...]}``); the hash key deliberately covers only the *configuration*
+(workload, machine, fidelity, kernel, knob grid), not the code version — a
+stale cache written by older simulator code is still served, but the
+manifest's git sha makes that auditable (see docs/analysis.md).  Bare-list
+cache files from before the stamp are still read.
 """
 from __future__ import annotations
 
@@ -94,7 +101,11 @@ def run_sweep(points: Sequence[SweepPoint], grid: Sequence[Knobs], *,
             path = os.path.join(cache_dir, f"whatif_{_key(point, grid)}.json")
             if os.path.exists(path):
                 with open(path) as f:
-                    results[i] = json.load(f)
+                    payload = json.load(f)
+                # stamped format is {"manifest": ..., "rows": [...]};
+                # pre-manifest caches were bare row lists
+                results[i] = payload["rows"] if isinstance(payload, dict) \
+                    else payload
                 continue
         todo.append(i)
 
@@ -110,11 +121,18 @@ def run_sweep(points: Sequence[SweepPoint], grid: Sequence[Knobs], *,
         for i, rows in zip(todo, fresh):
             results[i] = rows
             if cache_dir:
+                from repro.obs.manifest import build_manifest
                 os.makedirs(cache_dir, exist_ok=True)
                 path = os.path.join(cache_dir,
                                     f"whatif_{_key(points[i], grid)}.json")
+                point = points[i]
+                manifest = build_manifest(
+                    machine=point.machine, workload=point.workload,
+                    kernel=point.kernel, fidelity=point.fidelity,
+                    extra={"grid_points": len(grid)})
                 with open(path, "w") as f:
-                    json.dump(rows, f, indent=1)
+                    json.dump({"manifest": manifest, "rows": rows},
+                              f, indent=1)
 
     return [row for rows in results for row in rows]
 

@@ -50,6 +50,7 @@ from repro.core import isa
 from repro.core.isa import Instr, TensorMap
 from repro.core.machine import GPUMachine
 from repro.core.memory import EventQueue, build_memory
+from repro.obs.labels import make_label
 
 READY, STALLED, DONE = 0, 1, 2
 
@@ -63,11 +64,17 @@ class CTATrace:
     ``roles`` optionally names each warpgroup's declared role instance
     (e.g. ``["producer", "consumer0", "consumer1"]``, from the kernel IR);
     thread labels — and therefore stall-attribution keys — use these names
-    instead of positional ``wg{i}`` indices when present."""
+    instead of positional ``wg{i}`` indices when present.
+
+    ``rings`` optionally maps each declared ring buffer to its stage sids
+    (``{"K": (0, 2), "V": (1, 3)}``, from the kernel IR) — pure metadata
+    the engine never reads; the counter sink uses it to derive per-ring
+    occupancy depth from the mbarrier/release state."""
     wgs: List[List[Instr]]
     n_consumers: int = 2
     name: str = ""
     roles: Optional[List[str]] = None
+    rings: Optional[Dict[str, Tuple[int, ...]]] = None
 
 
 class WGThread:
@@ -116,7 +123,7 @@ class CTA:
         roles = trace.roles
         for i, t in enumerate(self.threads):
             role = roles[i] if roles and i < len(roles) else f"wg{i}"
-            t.label = f"cta{idx}/{role}"
+            t.label = make_label(idx, role)
             t.order = (idx, i)
         self.mbarrier: Dict[int, int] = {}        # sid -> completed signals
         self.stage_releases: Dict[int, int] = {}  # sid -> consumer releases
@@ -718,7 +725,8 @@ class Engine:
                  mem_scale: Optional[float] = None, record_gantt: bool = False,
                  seed: int = 0, direct_hbm: bool = False, tracer=None,
                  broadcast_wake: bool = False,
-                 scheduler: Optional[str] = None):
+                 scheduler: Optional[str] = None,
+                 counters=None):
         if scheduler is None:
             scheduler = "broadcast" if broadcast_wake else "event"
         elif scheduler not in self.SCHEDULERS:
@@ -743,6 +751,12 @@ class Engine:
             tracer = EventTracer()
         self.tracer = tracer
         self.record_gantt = tracer is not None
+        # opt-in PM-counter sink (obs.counters.CounterSink).  The run loops
+        # only ever *read* engine state through it at window boundaries, so
+        # attaching one cannot change simulated behavior (bit-neutrality is
+        # enforced in tests/test_engine_equiv.py); when None the cost is a
+        # single is-None test per loop iteration.
+        self.counters = counters
         self.broadcast_wake = scheduler == "broadcast"
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
         self.pending: deque = deque()
@@ -809,8 +823,11 @@ class Engine:
         active = self._active
         sms = self.sms
         evq = self.evq
+        snk = self.counters
         while self.cycle < max_cycles:
             evq.pop_ready(self.cycle)
+            if snk is not None and self.cycle >= snk.next_sample:
+                snk.sample(self.cycle, self)
             if self.retired == self.launched and not self.pending:
                 break
             progressed = False
@@ -845,6 +862,8 @@ class Engine:
                     # legacy rescan: re-mark every SM after each time jump
                     for sm in sms:
                         self.mark_active(sm)
+        if snk is not None:
+            snk.finish(self.cycle, self)
         return self.stats()
 
     def _run_event(self, max_cycles: int) -> dict:
@@ -865,8 +884,11 @@ class Engine:
         evq = self.evq
         heap = self._active_heap
         flags = self._active_flags
+        snk = self.counters
         while self.cycle < max_cycles:
             evq.pop_ready(self.cycle)
+            if snk is not None and self.cycle >= snk.next_sample:
+                snk.sample(self.cycle, self)
             if self.retired == self.launched and not self.pending:
                 break
             progressed = False
@@ -895,6 +917,8 @@ class Engine:
                 self.deadlocked = self.retired < self.launched
                 break
             self.cycle = max(self.cycle + 1, nxt)
+        if snk is not None:
+            snk.finish(self.cycle, self)
         return self.stats()
 
     # ------------------------------------------------------------------

@@ -9,6 +9,12 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
+# tag parsing lives in obs.labels (single source of truth for the
+# cta{i}/{role} + {lane}:{label}:{tag} conventions); lane_of is
+# re-exported here for back-compat
+from repro.obs.labels import label_of, lane_of, make_label  # noqa: F401
+from repro.obs.labels import split_gantt_tag
+
 LANES = ("tma", "mma", "bubble")
 
 
@@ -26,13 +32,9 @@ def from_events(events) -> List[Tuple[str, int, int]]:
     return out
 
 
-def lane_of(tag: str) -> str:
-    return tag.split(":", 1)[0]
-
-
 def filter_sm(gantt: List[Tuple[str, int, int]], cta_ids=(0, 1)):
     """Keep intervals belonging to the given CTA ids (one SM's residents)."""
-    keep = tuple(f"cta{i}/" for i in cta_ids)
+    keep = tuple(make_label(i, "") for i in cta_ids)
     return [g for g in gantt if any(k in g[0] for k in keep)]
 
 
@@ -44,9 +46,8 @@ def render_text(gantt: List[Tuple[str, int, int]], width: int = 100,
     t_end = t_max or max(e for _, _, e in gantt)
     rows = {}
     for tag, s, e in gantt:
-        lane = lane_of(tag)
-        wg = tag.split(":")[1] if ":" in tag else "?"
-        key = f"{wg}:{lane}"
+        lane, wg, _ = split_gantt_tag(tag)
+        key = f"{wg or '?'}:{lane}"
         rows.setdefault(key, []).append((s, e))
     out = []
     for key in sorted(rows):

@@ -185,9 +185,15 @@ class CTABuilder:
         return prog
 
     def finish(self) -> CTATrace:
+        # ring -> stage-sid metadata rides along so observability can map
+        # mbarrier/release state back to declared ring buffers; the engine
+        # itself never reads it
+        rings = {r.name: tuple(self.sid(r.name, s) for s in range(r.stages))
+                 for r in self.rings}
         return CTATrace(wgs=[p.instrs for _, p in self._wgs],
                         n_consumers=self.n_consumers, name=self.name,
-                        roles=[lbl for lbl, _ in self._wgs])
+                        roles=[lbl for lbl, _ in self._wgs],
+                        rings=rings or None)
 
 
 class KernelSpec:

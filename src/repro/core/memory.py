@@ -104,12 +104,15 @@ class DRAM:
         self.free_at = [0] * n          # next cycle each channel can start
         self.service = cfg.dram_line_service_cycles
         self.bytes_served = 0
+        self.busy_cycles = 0.0          # channel-occupied cycles (observable
+                                        # only: feeds obs counter timelines)
 
     def access(self, cycle: int, line: int, cb: Callable):
         ch = (line // self.cfg.line_bytes) % self.channels
         start = max(cycle, self.free_at[ch])
         self.free_at[ch] = start + self.service
         self.bytes_served += self.cfg.line_bytes
+        self.busy_cycles += self.service
         self.evq.push(int(start + self.service + self.cfg.dram_latency), cb)
 
 
@@ -131,6 +134,8 @@ class L2Slice:
         self.misses = 0
         self.mshr_merges = 0
         self.rc_inserts = 0
+        self.mshr_peak = 0              # high-water outstanding misses
+                                        # (observable only: MSHR pressure)
 
     @property
     def occupancy(self) -> float:
@@ -174,6 +179,8 @@ class L2Slice:
             return
         self.misses += 1
         self.mshr[line] = [cb]
+        if len(self.mshr) > self.mshr_peak:
+            self.mshr_peak = len(self.mshr)
 
         def fill():
             self._insert(line, dirty=write)      # alloc-on-fill
@@ -250,6 +257,8 @@ class L2Cache:
             agg["misses"] += sl.misses
             agg["mshr_merges"] += sl.mshr_merges
             agg["rc_inserts"] += sl.rc_inserts
+            if sl.mshr_peak > agg["mshr_peak"]:
+                agg["mshr_peak"] = sl.mshr_peak
         agg["requests"] = self.requests
         return dict(agg)
 
@@ -454,7 +463,7 @@ class DirectHBM:
 
     def stats(self):
         return {"requests": self.requests, "hits": 0, "misses": self.requests,
-                "mshr_merges": 0, "rc_inserts": 0}
+                "mshr_merges": 0, "rc_inserts": 0, "mshr_peak": 0}
 
 
 def build_memory(cfg: GPUMachine, evq: EventQueue, scale: float = 1.0,

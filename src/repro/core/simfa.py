@@ -19,6 +19,7 @@ substitution structured instead of ad hoc):
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Union
 
@@ -28,6 +29,8 @@ from repro.core.engine import Engine
 from repro.core.kprog import registry as kernel_registry
 from repro.core.kprog.ir import KernelSpec
 from repro.core.machine import GPUMachine
+from repro.obs.counters import CounterSink
+from repro.obs.manifest import build_manifest
 
 FULL_CTA_LIMIT = 600
 
@@ -50,12 +53,16 @@ class SimResult:
     gantt: Optional[list] = None
     trace: Optional[object] = None   # analysis.events.EventTracer of the
                                      # (first) simulated engine run
+    counters: Optional[object] = None  # obs.counters.CounterSink of the
+                                       # (first) simulated engine run
+    manifest: Optional[dict] = None    # obs.manifest provenance stamp
 
 
 def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
-         engine_opts=None):
+         engine_opts=None, counters=None):
     eng = Engine(cfg, n_sms=n_sms, mem_scale=mem_scale,
-                 record_gantt=record_gantt, **(engine_opts or {}))
+                 record_gantt=record_gantt, counters=counters,
+                 **(engine_opts or {}))
     for tm in tmaps.values():
         eng.define_tmap(tm)
     eng.launch(ctas)
@@ -67,13 +74,20 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
                  tiling=None, fidelity: str = "auto",
                  n_sub: int = 8, record_gantt: bool = False,
                  record_events: bool = False,
+                 record_counters: bool = False,
+                 counter_window: int = 256,
                  engine_opts: Optional[dict] = None,
                  kernel: Union[str, KernelSpec] = "fa3") -> SimResult:
     """Simulate one kernel launch (name kept for history; ``kernel=``
     dispatches through the registry, defaulting to the FA3 ping-pong the
     driver originally hardcoded).  ``tiling=None`` takes the spec's
     default tiling.  ``engine_opts`` forwards to :class:`Engine` — e.g.
-    ``{"scheduler": "waiter"}`` to pin a fallback scheduler."""
+    ``{"scheduler": "waiter"}`` to pin a fallback scheduler.
+
+    ``record_counters=True`` attaches an :class:`obs.counters.CounterSink`
+    (windowed PM-counter timelines on ``SimResult.counters``) to the first
+    simulated engine run; it is bit-neutral — cycles and stats do not
+    change.  Every result carries an ``obs.manifest`` provenance stamp."""
     spec = kernel_registry.get(kernel)
     tiling = tiling if tiling is not None else spec.default_tiling()
     # total CTA count is analytic; only the traces we will actually run are
@@ -85,10 +99,14 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     ctas, tmaps = spec.build(cfg, w, tiling=tiling,
                              max_ctas=min(total, need))
     record = record_gantt or record_events
+    snk = CounterSink(window=counter_window) if record_counters else None
+    t_wall = time.perf_counter()
 
     if fidelity == "full":
         eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record,
-                       engine_opts)
+                       engine_opts, counters=snk)
+        manifest = _manifest(cfg, w, spec, tiling, eng, "full", snk,
+                             time.perf_counter() - t_wall, st["cycles"])
         return SimResult(
             latency_us=st["time_us"], cycles=st["cycles"], fidelity="full",
             n_ctas_total=total, n_ctas_simulated=total,
@@ -98,14 +116,16 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
             dram_bytes=st["dram_bytes"], l2_stats=st["l2"],
             deadlocked=eng.deadlocked, kernel=spec.name,
             gantt=eng.gantt() if record_gantt else None,
-            trace=eng.tracer if record_events else None)
+            trace=eng.tracer if record_events else None,
+            counters=snk, manifest=manifest)
 
     # hierarchical: n_sub SMs stand in for the machine; two-wave composition
     per_wave_sub = n_sub * cfg.occupancy_limit
     scale = n_sub / cfg.num_sms
     one = ctas[:per_wave_sub]
     two = ctas[:2 * per_wave_sub]
-    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record, engine_opts)
+    eng1, st1 = _run(cfg, one, tmaps, n_sub, scale, record, engine_opts,
+                     counters=snk)
     if len(two) > len(one):
         eng2, st2 = _run(cfg, two, tmaps, n_sub, scale,
                          engine_opts=engine_opts)
@@ -119,6 +139,8 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     cycles = st1["cycles"] + extra_waves * marginal
     # traffic extrapolation: simulated CTAs -> all CTAs
     traf_scale = total / len(two)
+    manifest = _manifest(cfg, w, spec, tiling, eng1, "hierarchical", snk,
+                         time.perf_counter() - t_wall, cycles)
     return SimResult(
         latency_us=cycles / (cfg.freq_ghz * 1e3), cycles=cycles,
         fidelity="hierarchical", n_ctas_total=total,
@@ -130,7 +152,17 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         l2_stats=st2["l2"], deadlocked=eng1.deadlocked or eng2.deadlocked,
         kernel=spec.name,
         gantt=eng1.gantt() if record_gantt else None,
-        trace=eng1.tracer if record_events else None)
+        trace=eng1.tracer if record_events else None,
+        counters=snk, manifest=manifest)
+
+
+def _manifest(cfg, w, spec, tiling, eng, fidelity, snk, wall_s, cycles):
+    return build_manifest(
+        machine=cfg, workload=w, kernel=spec.name, tiling=tiling,
+        scheduler=eng.scheduler, fidelity=fidelity,
+        counter_window=snk.window if snk is not None else None,
+        wall_s=wall_s, sim_cycles=int(cycles),
+        events_popped=eng.evq.popped)
 
 
 # preferred, kernel-neutral name

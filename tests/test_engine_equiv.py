@@ -130,6 +130,57 @@ def test_fa3_reference_anchor_73614():
     assert got == FULL_ANCHOR
 
 
+def _run_with_counters(name, scheduler):
+    """Same launch as ``_run`` but with the PM-counter sink attached."""
+    from repro.obs import CounterSink
+    cfg, n_sms, kw = CONFIGS[name]
+    kw = dict(kw)
+    tiling = kw.pop("tiling", FA3Tiling())
+    causal = kw.pop("causal", False)
+    ctas, tmaps = fa3_kernel_ctas(cfg, tiling=tiling, causal=causal, **kw)
+    tracer = EventTracer()
+    snk = CounterSink(window=128)
+    eng = Engine(cfg, n_sms=n_sms, mem_scale=n_sms / cfg.num_sms,
+                 tracer=tracer, scheduler=scheduler, counters=snk)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    return snk, st, _events(tracer)
+
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_counter_sink_is_bit_neutral(scheduler):
+    """Attaching the observability sink must not perturb the simulation:
+    stats dicts and event streams identical with counters on vs. off, for
+    every scheduler."""
+    _, st_off, ev_off = _run("small", scheduler)
+    snk, st_on, ev_on = _run_with_counters("small", scheduler)
+    assert st_on == st_off, f"counters perturb stats under {scheduler}"
+    assert ev_on == ev_off, f"counters perturb events under {scheduler}"
+    assert len(snk.cycles) > 1      # and the sink actually sampled
+
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_fa3_reference_anchor_73614_with_counters(scheduler):
+    """The pinned full-fidelity anchor must hold with the sink attached,
+    under every scheduler — the acceptance bar for the observability
+    layer."""
+    from repro.obs import CounterSink
+    w = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **w)
+    snk = CounterSink()
+    eng = Engine(H800, counters=snk, scheduler=scheduler)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    got = {k: st[k] for k in FULL_ANCHOR}
+    assert got == FULL_ANCHOR
+    assert snk.totals["dram_bytes"] == FULL_ANCHOR["dram_bytes"]
+    assert snk.totals["tma_lines"] == FULL_ANCHOR["tma_lines"]
+
+
 # kernel-program grid: all four registered kernels, lowered through the
 # registry, must also be scheduler-bit-exact (kernel -> machine, n_sms,
 # workload, tiling)

@@ -1,0 +1,275 @@
+"""Observability subsystem tests (obs/): conservation, schema, provenance.
+
+1. **Counter conservation** — the windowed PM-counter timelines must
+   integrate exactly to the engine's end-of-run totals: DRAM bytes per
+   window sum to ``SimResult.dram_bytes``, per-SM tensor-core busy sums to
+   ``tc_busy_cycles``, sampled ring occupancy never exceeds the declared
+   stage depth.  Holds regardless of sampling cadence because samples are
+   cumulative-counter snapshots (telescoping sums).
+2. **Trace-export schema** — the Perfetto/Chrome ``trace_event`` JSON is
+   valid, ``ts`` is monotonic per thread, every ``s``/``f`` flow arrow and
+   ``b``/``e`` async pair is matched, for all four registered kernels.
+3. **Provenance** — manifest hashing/host matching, ``save_json``
+   stamping, sweep-cache back-compat with pre-manifest bare-list files.
+
+Bit-neutrality of the sink itself is enforced in ``test_engine_equiv.py``.
+"""
+import json
+
+import pytest
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+from repro.obs import (build_manifest, build_report, config_hash,
+                       export_trace, host_fingerprint, render_report,
+                       role_stall_timelines, same_host,
+                       subsystem_wall_breakdown)
+from repro.obs.labels import (cta_of, label_of, lane_of, make_label, role_of,
+                              split_gantt_tag, split_label)
+
+W_SMALL = AttnWorkload(name="obs-small", B=1, L=256, S=512, H_kv=1, G=2,
+                       D=128)
+
+# one small full-fidelity FA3 workload per registered kernel (decode shape
+# for split-KV), kept tiny so the full grid stays tier-1 fast
+KERNEL_WORKLOADS = {
+    "fa3": W_SMALL,
+    "fa3_cooperative": W_SMALL,
+    "fa2": AttnWorkload(name="obs-fa2", B=1, L=192, S=384, H_kv=1, G=1,
+                        D=64),
+    "splitkv_decode": AttnWorkload(name="obs-decode", B=2, L=1, S=2048,
+                                   H_kv=2, G=4, D=128),
+}
+
+
+@pytest.fixture(scope="module")
+def res():
+    """One recorded full-fidelity FA3 run shared by the conservation and
+    report tests."""
+    return simulate_fa3(W_SMALL, H800, fidelity="full", record_events=True,
+                        record_counters=True, counter_window=128)
+
+
+# ---------------------------------------------------------------------------
+# counter conservation
+# ---------------------------------------------------------------------------
+
+def test_dram_timeline_integrates_to_total(res):
+    snk = res.counters
+    integral = sum(db for _, _, db in snk.dram_bytes_per_window())
+    assert integral == res.dram_bytes == snk.totals["dram_bytes"]
+
+
+def test_tc_busy_integrates_to_engine_total(res):
+    snk = res.counters
+    total = sum(busy for _, _, busy in snk.tc_busy_per_window())
+    assert total == snk.totals["tc_busy_cycles"]
+    # per-SM series telescope to their own finals too
+    for sm_id, series in snk.tc_busy.items():
+        assert sum(b for _, _, b in snk.tc_busy_per_window(sm_id)) \
+            == series[-1]
+
+
+def test_tma_lines_integrate_to_total(res):
+    snk = res.counters
+    assert snk.tma_lines[-1] == snk.totals["tma_lines"]
+
+
+def test_ring_occupancy_bounded_by_declared_depth(res):
+    snk = res.counters
+    assert snk.ring_occupancy, "kernel-IR ring metadata never reached sink"
+    for key, series in snk.ring_occupancy.items():
+        declared = snk.ring_depths[key]
+        for _, depth in series:
+            assert 0 <= depth <= declared, (key, depth, declared)
+    for key, peak in snk.ring_max_depths().items():
+        assert peak <= snk.ring_depths[key]
+
+
+def test_derived_rates_are_fractions(res):
+    snk = res.counters
+    assert all(0.0 <= u <= 1.0 for _, u in snk.dram_util_timeline())
+    assert all(0.0 <= r <= 1.0 for _, r in snk.l2_hit_rate_timeline())
+    limit = H800.num_sms * H800.occupancy_limit
+    assert 0.0 < snk.avg_resident_ctas() <= limit
+    assert all(n >= 0 for _, n in snk.tma_inflight_timeline())
+
+
+def test_stall_timelines_sum_to_attribution_totals(res):
+    """The windowed per-role stall timelines are an exact re-binning of the
+    DAG stall attribution, not an approximation."""
+    from repro.analysis import dag as dag_mod
+    from repro.analysis.critical_path import attribute_stalls
+
+    tl = role_stall_timelines(res.trace, window=128)
+    sr = attribute_stalls(dag_mod.build(res.trace.events,
+                                        res.trace.dispatch_parent))
+    want = sr.by_role()
+    for role, buckets in tl.items():
+        for bucket, wins in buckets.items():
+            assert sum(wins.values()) == pytest.approx(
+                want[role][bucket], abs=1e-6), (role, bucket)
+
+
+# ---------------------------------------------------------------------------
+# trace export schema
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", sorted(KERNEL_WORKLOADS))
+def test_trace_export_schema(kernel, tmp_path):
+    r = simulate_fa3(KERNEL_WORKLOADS[kernel], H800, fidelity="full",
+                     record_events=True, record_counters=True,
+                     kernel=kernel)
+    path = tmp_path / f"{kernel}.trace.json"
+    export_trace(str(path), r.trace, r.counters, r.manifest, name=kernel)
+
+    obj = json.loads(path.read_text())          # valid JSON round-trip
+    evs = obj["traceEvents"]
+    assert obj["otherData"]["manifest"]["kernel"] == kernel
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in evs)
+    assert any(e["ph"] == "C" for e in evs), "no counter tracks exported"
+
+    last_ts = {}
+    flows = {}
+    async_open = {}
+    for e in evs:
+        if e["ph"] == "M":
+            continue
+        tid = e.get("tid", 0)
+        assert e["ts"] >= last_ts.get(tid, 0), "ts not monotonic per tid"
+        last_ts[tid] = e["ts"]
+        if e["ph"] in ("s", "f"):
+            flows.setdefault((e["cat"], e["id"], e["name"]), []).append(
+                e["ph"])
+        elif e["ph"] in ("b", "e"):
+            async_open[(e["cat"], e["id"])] = \
+                async_open.get((e["cat"], e["id"]), 0) + \
+                (1 if e["ph"] == "b" else -1)
+    assert flows, "no flow arrows exported"
+    for key, phases in flows.items():
+        assert sorted(phases) == ["f", "s"], f"unmatched flow {key}"
+    assert async_open and all(v == 0 for v in async_open.values()), \
+        "unbalanced b/e async slices"
+
+
+def test_trace_export_counters_only(tmp_path):
+    """A trace with just counter tracks (no PipeEvents) is still valid."""
+    r = simulate_fa3(W_SMALL, H800, fidelity="full", record_counters=True)
+    obj = export_trace(str(tmp_path / "c.json"), None, r.counters)
+    assert any(e["ph"] == "C" for e in obj["traceEvents"])
+    assert not any(e["ph"] in ("s", "f") for e in obj["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# label convention (the gantt/critical_path dedupe)
+# ---------------------------------------------------------------------------
+
+def test_label_roundtrip_and_roles():
+    assert make_label(3, "consumer1") == "cta3/consumer1"
+    assert split_label("cta3/consumer1") == (3, "consumer1")
+    assert cta_of("cta12/producer") == 12
+    assert cta_of("freeform") is None
+    assert role_of("cta3/consumer1") == "consumer"
+    assert role_of("cta0/producer") == "producer"
+    assert role_of("cta0/wg2") == "wg"
+    assert split_gantt_tag("mma:cta0/consumer1:QK") == \
+        ("mma", "cta0/consumer1", "QK")
+    assert lane_of("tma:cta1/producer:K3") == "tma"
+    assert label_of("bubble:cta1/consumer0") == "cta1/consumer0"
+
+
+def test_gantt_and_critical_path_share_label_parser():
+    from repro.analysis import critical_path
+    from repro.core import gantt
+
+    assert gantt.lane_of is lane_of
+    assert critical_path.role_of is role_of
+
+
+# ---------------------------------------------------------------------------
+# manifests + stamping
+# ---------------------------------------------------------------------------
+
+def test_manifest_hashes_and_host_identity(res):
+    m = build_manifest(machine=H800, workload=W_SMALL, kernel="fa3",
+                       scheduler="event", wall_s=0.5, sim_cycles=1000,
+                       events_popped=100)
+    assert m["machine_hash"] == config_hash(H800)        # deterministic
+    assert m["workload_hash"] == config_hash(W_SMALL)
+    assert m["cycles_per_s"] == 2000.0
+    assert m["host_id"] == host_fingerprint()
+    assert same_host(m, res.manifest)                    # this very host
+    assert not same_host(m, None) and not same_host(None, m)
+    assert not same_host(m, {"host_id": "ffffffffffff"})
+
+
+def test_simresult_carries_manifest(res):
+    m = res.manifest
+    assert m["kernel"] == "fa3" and m["fidelity"] == "full"
+    assert m["sim_cycles"] == int(res.cycles)
+    assert m["counter_window"] == 128
+    assert m["wall_s"] > 0 and m["events_per_s"] > 0
+
+
+def test_save_json_stamps_manifest(tmp_path):
+    from repro.analysis.report import save_json
+
+    p1 = tmp_path / "d.json"
+    save_json(str(p1), {"x": 1})
+    got = json.loads(p1.read_text())
+    assert got["x"] == 1 and "git_sha" in got["manifest"]
+
+    p2 = tmp_path / "l.json"
+    save_json(str(p2), [{"x": 1}])
+    got = json.loads(p2.read_text())
+    assert got["rows"] == [{"x": 1}] and "manifest" in got
+
+    p3 = tmp_path / "raw.json"
+    save_json(str(p3), {"x": 1}, manifest=False)
+    assert json.loads(p3.read_text()) == {"x": 1}
+
+
+def test_sweep_cache_reads_legacy_and_stamped(tmp_path):
+    """Pre-manifest bare-list cache files and stamped ones both round-trip
+    through ``run_sweep`` without re-simulating."""
+    from repro.analysis.sweep import SweepPoint, _key, knob_grid, run_sweep
+
+    grid = knob_grid()
+    point = SweepPoint(workload=W_SMALL, machine=H800)
+    marker = [{"workload": "cached", "speedup": 1.0}]
+
+    legacy = tmp_path / f"whatif_{_key(point, grid)}.json"
+    legacy.write_text(json.dumps(marker))               # bare-list (legacy)
+    assert run_sweep([point], grid, cache_dir=str(tmp_path)) == marker
+
+    legacy.write_text(json.dumps({"manifest": {"git_sha": "x"},
+                                  "rows": marker}))     # stamped
+    assert run_sweep([point], grid, cache_dir=str(tmp_path)) == marker
+
+
+def test_subsystem_wall_breakdown_shape():
+    result, breakdown = subsystem_wall_breakdown(
+        simulate_fa3, KERNEL_WORKLOADS["fa2"], H800, fidelity="full")
+    assert result.cycles > 0
+    assert breakdown and all(v >= 0 for v in breakdown.values())
+    assert "core.engine" in breakdown       # the run loop always shows up
+
+
+# ---------------------------------------------------------------------------
+# NCU-style report
+# ---------------------------------------------------------------------------
+
+def test_report_sections_and_render(res):
+    rep = build_report(res, H800, workload=W_SMALL, manifest=res.manifest)
+    sol = rep["speed_of_light"]
+    assert 0 < sol["sol_pct"] <= 100.0
+    assert sol["sol_pct"] == max(sol["dram_pct"], sol["l2_pct"],
+                                 sol["tensorcore_pct"])
+    assert rep["occupancy"]["pct"] > 0
+    assert rep["rings"] and all(r["peak_depth"] <= r["declared"]
+                                for r in rep["rings"].values())
+    assert set(rep["stalls"]["buckets"]) >= {"tma-wait", "barrier-wait"}
+    txt = render_report(rep)
+    assert "speed of light" in txt and "stall breakdown" in txt
+    assert res.manifest["git_sha"] in txt
