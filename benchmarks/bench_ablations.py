@@ -14,7 +14,7 @@ Workload: GQA attention with H_kv=8, D=128 — the (B,S,H,D) layout's
 from __future__ import annotations
 
 from repro.configs.llama3 import AttnWorkload
-from repro.core.machine import H800, h800_variant
+from repro.core.machine import h800_variant
 from repro.core.simfa import simulate_fa3
 
 from benchmarks.common import Sink

@@ -8,7 +8,6 @@ other's MMA phases rather than stacking).
 """
 from __future__ import annotations
 
-from pathlib import Path
 
 from repro.configs.llama3 import workload
 from repro.core.gantt import render_text

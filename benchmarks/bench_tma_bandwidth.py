@@ -14,7 +14,7 @@ from typing import List
 from repro.core import isa
 from repro.core.engine import CTATrace, Engine
 from repro.core.isa import Instr, TensorMap
-from repro.core.machine import H800, GPUMachine, h800_variant
+from repro.core.machine import H800, GPUMachine
 
 from benchmarks.common import Sink
 

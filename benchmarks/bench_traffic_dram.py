@@ -15,10 +15,10 @@ the crossover happens at proportionally shorter S than H800's 32-48K.
 """
 from __future__ import annotations
 
-from repro.configs.llama3 import AttnWorkload, workload
+from repro.configs.llama3 import workload
 from repro.core import analytical
 from repro.core.genz_baseline import genz_dram_traffic
-from repro.core.machine import H800, GPUMachine, h800_variant
+from repro.core.machine import H800, h800_variant
 from repro.core.simfa import simulate_fa3
 from repro.core.tracegen_fa3 import FA3Tiling
 

@@ -15,16 +15,19 @@ questions the flat gantt chart could not answer:
         --sweep tma_bw=0.5,1,2,4 --json results/whatif.json
     PYTHONPATH=src python examples/analyze_pipeline.py \
         --report --trace-out results/fa3.trace.json   # open in ui.perfetto.dev
+    PYTHONPATH=src python examples/analyze_pipeline.py \
+        --kernel fa2 --verify                # pre-simulation lint, exit != 0
+                                             # when the spec is illegal
 """
 from __future__ import annotations
 
 import argparse
-import json
+import sys
 
 from repro import obs
 from repro.analysis import critical_path as cp
 from repro.analysis import dag as dag_mod
-from repro.analysis import report, whatif
+from repro.analysis import report
 from repro.analysis.sweep import SweepPoint, knob_grid, run_sweep
 from repro.configs.llama3 import FAMILY, AttnWorkload, workload
 from repro.core.kprog import registry as kernel_registry
@@ -69,6 +72,11 @@ def main():
                          "light %%, occupancy, stall buckets)")
     ap.add_argument("--counter-window", type=int, default=256,
                     help="PM-counter sampling window in cycles")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify the kernel program for this "
+                         "workload (deadlock freedom, ring/barrier/commit "
+                         "protocol, hazards) and exit: 0 clean, 1 errors. "
+                         "A pre-simulation lint — nothing is simulated.")
     args = ap.parse_args()
 
     if args.kernel == "splitkv_decode":
@@ -80,6 +88,14 @@ def main():
     else:
         w = workload(args.model, args.seqlen, batch=args.batch,
                      causal=args.causal)
+
+    if args.verify:
+        from repro.core.kprog.verify import verify_spec
+        spec = kernel_registry.get(args.kernel, verify=False)
+        vrep = verify_spec(spec, cfg=H800, w=w)
+        print(vrep.render())
+        sys.exit(0 if vrep.ok else 1)
+
     print(f"simulating {w.name} ({args.kernel}) on {H800.name} "
           f"(fidelity={args.fidelity}) ...")
     want_counters = bool(args.trace_out) or args.report

@@ -9,8 +9,10 @@ here so that ``core.engine`` can import the tracer without a cycle):
   * ``whatif``        — DAG replay under scaled resource costs
   * ``sweep``         — multiprocessing what-if sweep driver w/ JSON caching
   * ``report``        — text / JSON report rendering
+  * ``hazards``       — runtime hazard sanitizer (``Engine(sanitize=True)``)
+                        + deadlock wait-for-graph explainer
 """
 from repro.analysis.events import EventTracer, PipeEvent  # noqa: F401
 
 __all__ = ["EventTracer", "PipeEvent", "events", "dag", "critical_path",
-           "whatif", "sweep", "report"]
+           "whatif", "sweep", "report", "hazards"]

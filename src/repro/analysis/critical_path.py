@@ -28,11 +28,11 @@ The buckets of one warpgroup sum *exactly* to its idle cycles
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
-from repro.analysis.dag import DONE, END, PipelineDAG
-from repro.analysis.events import BUBBLE, ISSUE, MMA, TMA
+from repro.analysis.dag import DONE, PipelineDAG
+from repro.analysis.events import BUBBLE, MMA, TMA
 from repro.core import isa
 # label parsing lives in obs.labels (single source of truth for the
 # cta{i}/{role} convention); role_of is re-exported here for back-compat

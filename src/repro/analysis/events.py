@@ -29,7 +29,7 @@ group completion, ...); for synchronous lane events ``t_done == t1``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core import isa

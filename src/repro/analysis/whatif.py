@@ -27,10 +27,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.analysis.dag import DONE, END, PipelineDAG
-from repro.analysis.events import BUBBLE, ISSUE, MMA, TMA
+from repro.analysis.dag import END, PipelineDAG
+from repro.analysis.events import BUBBLE, MMA, TMA
 
 
 @dataclass(frozen=True)

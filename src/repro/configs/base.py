@@ -7,8 +7,8 @@ no allocation); smoke tests use :meth:`ModelConfig.reduced`.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 # ---------------------------------------------------------------------------

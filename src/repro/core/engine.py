@@ -69,12 +69,21 @@ class CTATrace:
     ``rings`` optionally maps each declared ring buffer to its stage sids
     (``{"K": (0, 2), "V": (1, 3)}``, from the kernel IR) — pure metadata
     the engine never reads; the counter sink uses it to derive per-ring
-    occupancy depth from the mbarrier/release state."""
+    occupancy depth from the mbarrier/release state.
+
+    ``tokens`` (name -> sid) and ``acq_slots`` (per-WG ``{instr index:
+    (ring, raw slot)}`` for ACQUIRE_STAGE instructions) are further
+    IR-metadata riders consumed by the static verifier
+    (``repro.core.kprog.verify``) — sid-space collision checks need the
+    token allocation, and slot-aliasing witnesses need the pre-wrap slot
+    numbers that lowering folds into sids."""
     wgs: List[List[Instr]]
     n_consumers: int = 2
     name: str = ""
     roles: Optional[List[str]] = None
     rings: Optional[Dict[str, Tuple[int, ...]]] = None
+    tokens: Optional[Dict[str, int]] = None
+    acq_slots: Optional[List[Dict[int, Tuple[str, int]]]] = None
 
 
 class WGThread:
@@ -415,6 +424,7 @@ class SM:
         self.tracer = engine.tracer
         self.broadcast = engine.broadcast_wake
         self.event = engine.scheduler == "event"
+        self.san = engine.sanitizer
         self.ctas: List[CTA] = []
         self._threads: List[WGThread] = []   # flat resident non-DONE threads
         # event-mode issue-eligible queue: READY, non-busy, non-done threads
@@ -645,6 +655,8 @@ class SM:
                 yield th
 
     def _execute(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
+        if self.san is not None:
+            self.san.on_execute(cycle, th, ins)
         op = ins.op
         cta = th.cta
         if op == isa.TMA_TENSOR:
@@ -726,7 +738,7 @@ class Engine:
                  seed: int = 0, direct_hbm: bool = False, tracer=None,
                  broadcast_wake: bool = False,
                  scheduler: Optional[str] = None,
-                 counters=None):
+                 counters=None, sanitize: bool = False):
         if scheduler is None:
             scheduler = "broadcast" if broadcast_wake else "event"
         elif scheduler not in self.SCHEDULERS:
@@ -757,6 +769,18 @@ class Engine:
         # enforced in tests/test_engine_equiv.py); when None the cost is a
         # single is-None test per loop iteration.
         self.counters = counters
+        # opt-in runtime hazard sanitizer (analysis.hazards): TSan-style
+        # per-event cross-check of the ring protocol, read-only over
+        # simulated state like the counter sink, so bit-neutral by the
+        # same argument; when off the cost is one is-None test per issue
+        self.sanitizer = None
+        if sanitize:
+            from repro.analysis.hazards import HazardSanitizer
+            self.sanitizer = HazardSanitizer()
+        # populated by analysis.hazards.explain_deadlock the moment a run
+        # loop concludes nothing can ever progress again (deadlocked=True);
+        # deliberately NOT part of stats() — diagnostics, not simulation
+        self.deadlock_info: Optional[dict] = None
         self.broadcast_wake = scheduler == "broadcast"
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
         self.pending: deque = deque()
@@ -802,6 +826,8 @@ class Engine:
 
     def cta_retired(self, sm: SM, cta: CTA):
         self.retired += 1
+        if self.sanitizer is not None:
+            self.sanitizer.on_cta_retired(self.cycle, cta)
         self._dispatch(parent=cta.idx)
 
     def mark_active(self, sm: SM):
@@ -851,7 +877,7 @@ class Engine:
                         if th.state == READY and not th.done()
                         and th.busy_until > self.cycle]
                 if not wake:
-                    self.deadlocked = self.retired < self.launched
+                    self._flag_deadlock()
                     break
                 self.cycle = min(wake)
                 for sm in sms:
@@ -914,7 +940,7 @@ class Engine:
             if nxt is None:
                 # no issuable thread, no pending event: nothing can ever
                 # make progress again (busy sleepers hold queue timers)
-                self.deadlocked = self.retired < self.launched
+                self._flag_deadlock()
                 break
             self.cycle = max(self.cycle + 1, nxt)
         if snk is not None:
@@ -922,6 +948,17 @@ class Engine:
         return self.stats()
 
     # ------------------------------------------------------------------
+    def _flag_deadlock(self):
+        """Both run loops land here when nothing can ever progress again.
+        Attaches the wait-for-graph explanation (which thread blocks on
+        which sid/bid, witness cycle) instead of just flipping the bool;
+        runs after the loop already decided to break, so it cannot perturb
+        simulated state."""
+        self.deadlocked = self.retired < self.launched
+        if self.deadlocked:
+            from repro.analysis.hazards import explain_deadlock
+            self.deadlock_info = explain_deadlock(self)
+
     def stats(self) -> dict:
         l2 = self.l2.stats()
         tc_busy = sum(sm.tc.busy_cycles for sm in self.sms)

@@ -6,8 +6,8 @@ ring-buffer stages, ``gid`` async commit groups, ``bid`` named barriers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 # opcodes
 DEF_TMAP = "DEF_TMAP"

@@ -53,6 +53,13 @@ class SplitKVDecode(KernelSpec):
     def default_tiling(self) -> SplitKVTiling:
         return SplitKVTiling()
 
+    def probe_workload(self):
+        """Decode-shaped probe: one query token, cache long enough that
+        every split streams 3 tiles (> stages, so the ring wraps)."""
+        from repro.configs.llama3 import AttnWorkload
+        return AttnWorkload(name=f"{self.name}-probe", B=1, L=1, S=1536,
+                            H_kv=1, G=2, D=64)
+
     # -- geometry --------------------------------------------------------
     def grid(self, w, tiling: SplitKVTiling):
         for b in range(w.B):

@@ -34,6 +34,10 @@ class FA2NonSpecialized(FA3PingPong):
     name = "fa2"
     roles = (Role("worker", N_WORKERS),)
     scheduling = "non-specialized"
+    # acquires in flight before the first release; None = the ring's stage
+    # count (the deepest legal value — anything larger over-subscribes the
+    # ring and is rejected by the kprog verifier)
+    prefetch_depth: "int | None" = None
 
     # -- role programs ---------------------------------------------------
     def cta(self, cfg: GPUMachine, w, tiling: FA3Tiling, *, b: int,
@@ -45,6 +49,8 @@ class FA2NonSpecialized(FA3PingPong):
         bubbles = softmax_bubble_cycles(cfg, t_m, t_n, D)
         n_qk = D // 16
         n_pv = math.ceil(t_n / 16)
+        depth = self.prefetch_depth if self.prefetch_depth is not None \
+            else stages
 
         # private K/V rings per worker: no cross-warpgroup smem sharing
         rings = []
@@ -67,7 +73,7 @@ class FA2NonSpecialized(FA3PingPong):
 
             # prologue: own Q load + fill the ring
             t.load(TM_Q, (b, q_block * t_m, h_q * D), token=f"q{c}", tag="Q")
-            for j in range(min(stages, n_tiles)):
+            for j in range(min(depth, n_tiles)):
                 load_tile(j)
             t.wait_token(f"q{c}")
             for j in range(n_tiles):
@@ -78,8 +84,8 @@ class FA2NonSpecialized(FA3PingPong):
                 t.wait_tile(vr, j)
                 t.gemm(m=t_m, n=D, steps=n_pv, tag=f"PV{j}", wait=0)
                 t.release(vr, j)
-                if j + stages < n_tiles:      # in-stream prefetch
-                    load_tile(j + stages)
+                if j + depth < n_tiles:       # in-stream prefetch
+                    load_tile(j + depth)
             t.store(TM_O, (b, q_block * t_m, h_q * D), tag="O")
 
         return cb.finish()

@@ -70,10 +70,15 @@ class WGProgram:
         self.label = label
         self.instrs: List[Instr] = []
         self._gid = 0
+        # instr index -> (ring, raw slot) for every acquire; rides along on
+        # CTATrace.acq_slots so the verifier can reconstruct pre-wrap slot
+        # numbers (sid folds slot % stages — see CTABuilder.sid)
+        self.acq_slots: Dict[int, Tuple[str, int]] = {}
 
     # -- producer side -------------------------------------------------
     def acquire(self, ring: str, slot: int) -> None:
         """pipeline.producer_acquire on the ring slot (blocks while full)."""
+        self.acq_slots[len(self.instrs)] = (ring, slot)
         self.instrs.append(Instr(isa.ACQUIRE_STAGE,
                                  sid=self.builder.sid(ring, slot)))
 
@@ -163,6 +168,19 @@ class CTABuilder:
 
     # -- number assignment ---------------------------------------------
     def sid(self, ring: str, slot: int) -> int:
+        """Map a (ring, slot) to its mbarrier/stage sid.
+
+        **Wrap contract**: ``slot`` is an *iteration* index, not a physical
+        stage — it wraps modulo the ring's declared ``stages`` (slot ``j``
+        and ``j + stages`` share a sid on purpose; the ACQUIRE/RELEASE
+        counting protocol serializes the reuse).  The wrap is silent by
+        design: callers write natural loop indices and the builder owns the
+        fold.  What the wrap must *never* do is alias two slots that are
+        live at the same time — that is a spec bug (e.g. a prefetch depth
+        exceeding ``stages``), and the static verifier
+        (``repro.core.kprog.verify``) flags it as ``ring-oversubscription``
+        with the pre-wrap slot numbers as witness (recorded per acquire in
+        ``CTATrace.acq_slots``)."""
         r = self.rings[self._ring_index[ring]]
         if self._interleaved:
             return (slot % r.stages) * len(self.rings) + self._ring_index[ring]
@@ -187,13 +205,17 @@ class CTABuilder:
     def finish(self) -> CTATrace:
         # ring -> stage-sid metadata rides along so observability can map
         # mbarrier/release state back to declared ring buffers; the engine
-        # itself never reads it
+        # itself never reads it.  Token sids and per-acquire raw slots ride
+        # along for the static verifier (sid-space collisions, aliasing
+        # witnesses).
         rings = {r.name: tuple(self.sid(r.name, s) for s in range(r.stages))
                  for r in self.rings}
         return CTATrace(wgs=[p.instrs for _, p in self._wgs],
                         n_consumers=self.n_consumers, name=self.name,
                         roles=[lbl for lbl, _ in self._wgs],
-                        rings=rings or None)
+                        rings=rings or None,
+                        tokens=dict(self._tokens) or None,
+                        acq_slots=[dict(p.acq_slots) for _, p in self._wgs])
 
 
 class KernelSpec:
@@ -213,6 +235,16 @@ class KernelSpec:
     # -- geometry --------------------------------------------------------
     def default_tiling(self):
         raise NotImplementedError
+
+    def probe_workload(self):
+        """A minimal representative workload for resolve-time verification
+        (``registry.get`` statically verifies each spec's lowered probe
+        launch once).  The default prefill shape exercises ring wrap
+        (several KV tiles per ring stage) and grouped heads; decode-shaped
+        kernels override (``w.L`` must be 1 there)."""
+        from repro.configs.llama3 import AttnWorkload
+        return AttnWorkload(name=f"{self.name}-probe", B=1, L=128, S=704,
+                            H_kv=1, G=2, D=64)
 
     def grid(self, w, tiling) -> Iterable[dict]:
         """CTA coordinates in launch (rasterization) order."""

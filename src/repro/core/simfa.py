@@ -56,6 +56,10 @@ class SimResult:
     counters: Optional[object] = None  # obs.counters.CounterSink of the
                                        # (first) simulated engine run
     manifest: Optional[dict] = None    # obs.manifest provenance stamp
+    deadlock_info: Optional[dict] = None  # analysis.hazards.explain_deadlock
+                                          # snapshot when deadlocked
+    hazards: Optional[list] = None     # analysis.hazards.HazardIssue list
+                                       # when the engine ran sanitize=True
 
 
 def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
@@ -117,7 +121,10 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
             deadlocked=eng.deadlocked, kernel=spec.name,
             gantt=eng.gantt() if record_gantt else None,
             trace=eng.tracer if record_events else None,
-            counters=snk, manifest=manifest)
+            counters=snk, manifest=manifest,
+            deadlock_info=eng.deadlock_info,
+            hazards=(eng.sanitizer.issues
+                     if eng.sanitizer is not None else None))
 
     # hierarchical: n_sub SMs stand in for the machine; two-wave composition
     per_wave_sub = n_sub * cfg.occupancy_limit
@@ -153,7 +160,10 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         kernel=spec.name,
         gantt=eng1.gantt() if record_gantt else None,
         trace=eng1.tracer if record_events else None,
-        counters=snk, manifest=manifest)
+        counters=snk, manifest=manifest,
+        deadlock_info=eng1.deadlock_info or eng2.deadlock_info,
+        hazards=(eng1.sanitizer.issues
+                 if eng1.sanitizer is not None else None))
 
 
 def _manifest(cfg, w, spec, tiling, eng, fidelity, snk, wall_s, cycles):

@@ -10,9 +10,8 @@ the short-list for the final pick. The framework consumes this through
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 from repro.configs.llama3 import AttnWorkload
 from repro.core.engine import Engine

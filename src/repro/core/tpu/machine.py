@@ -12,7 +12,6 @@ The event engine is reused with TPU semantics:
 from __future__ import annotations
 
 import math
-from dataclasses import replace
 
 from repro.core.machine import GPUMachine, TPUMachine, TPU_V5E
 

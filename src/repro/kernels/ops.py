@@ -10,7 +10,6 @@ Block sizes default to the SimFA-TPU autotuner's choice.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -18,7 +18,6 @@ from pathlib import Path
 import jax
 
 from repro.configs import registry
-from repro.configs.base import SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch import specs as specs_lib
 from repro.utils.hlo import collective_bytes, hlo_cost, xla_cost_analysis

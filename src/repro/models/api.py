@@ -7,7 +7,7 @@ Batch contract (all jnp arrays):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax.numpy as jnp
 

@@ -8,8 +8,6 @@ kernels do not lower on the CPU host platform; see DESIGN.md §8).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.models import attention, layers
 from repro.parallel import ctx as pctx
-from repro.models.transformer import REMAT_POLICIES, _scan_blocks, _stack_init
+from repro.models.transformer import _scan_blocks, _stack_init
 
 
 def _enc_block_init(key, cfg):

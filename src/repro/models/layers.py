@@ -7,7 +7,6 @@ follows cfg.compute_dtype (bf16 by default) with fp32 norms/softmax.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

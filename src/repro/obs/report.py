@@ -73,6 +73,13 @@ def build_report(result, cfg, *, workload=None,
     if workload is not None:
         rep["workload"] = getattr(workload, "name", str(workload))
 
+    dl = getattr(result, "deadlock_info", None)
+    if dl is not None:
+        rep["deadlock"] = dl     # analysis.hazards.explain_deadlock dict
+    hz = getattr(result, "hazards", None)
+    if hz:
+        rep["hazards"] = [i.render() for i in hz]
+
     snk = getattr(result, "counters", None)
     if snk is not None and snk.cycles:
         occ_limit = cfg.num_sms * cfg.occupancy_limit
@@ -127,6 +134,11 @@ def render_report(rep: Dict[str, Any]) -> str:
     L.append(f"  cycles {rep['cycles']:>12.0f}    latency"
              f" {rep['latency_us']:.1f} us"
              + ("    ** DEADLOCKED **" if rep.get("deadlocked") else ""))
+    if rep.get("deadlock"):
+        from repro.analysis.hazards import render_deadlock
+        L.extend(render_deadlock(rep["deadlock"]))
+    for line in rep.get("hazards", ()):
+        L.append(f"  sanitizer: {line}")
     la = rep["launch"]
     L.append(f"  ctas {la['ctas_total']} (simulated"
              f" {la['ctas_simulated']}), {la['waves']} waves")

@@ -15,10 +15,9 @@ Rules are path-pattern based over the param pytree; stacked scan layers
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

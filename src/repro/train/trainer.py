@@ -11,7 +11,6 @@ microbatch — the standard comm/compute overlap trick).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax

@@ -7,7 +7,6 @@ from repro.analysis import critical_path as cp
 from repro.analysis import dag as dag_mod
 from repro.analysis import events as ev_mod
 from repro.analysis import report, whatif
-from repro.analysis.events import EventTracer
 from repro.analysis.sweep import SweepPoint, knob_grid, run_sweep
 from repro.configs.llama3 import AttnWorkload
 from repro.core import isa

@@ -1,6 +1,5 @@
 """Fault-tolerance substrate: checkpoint manager + trainer semantics +
 serving engine + data-pipeline determinism."""
-import os
 
 import jax
 import jax.numpy as jnp

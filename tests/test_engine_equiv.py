@@ -163,14 +163,14 @@ def test_counter_sink_is_bit_neutral(scheduler):
 
 @pytest.mark.parametrize("scheduler", SCHEDULERS)
 def test_fa3_reference_anchor_73614_with_counters(scheduler):
-    """The pinned full-fidelity anchor must hold with the sink attached,
-    under every scheduler — the acceptance bar for the observability
-    layer."""
+    """The pinned full-fidelity anchor must hold with the counter sink AND
+    the hazard sanitizer attached, under every scheduler — the acceptance
+    bar for the observability layer and the sanitizer's bit-neutrality."""
     from repro.obs import CounterSink
     w = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
     ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **w)
     snk = CounterSink()
-    eng = Engine(H800, counters=snk, scheduler=scheduler)
+    eng = Engine(H800, counters=snk, scheduler=scheduler, sanitize=True)
     for tm in tmaps.values():
         eng.define_tmap(tm)
     eng.launch(ctas)
@@ -179,6 +179,7 @@ def test_fa3_reference_anchor_73614_with_counters(scheduler):
     assert got == FULL_ANCHOR
     assert snk.totals["dram_bytes"] == FULL_ANCHOR["dram_bytes"]
     assert snk.totals["tma_lines"] == FULL_ANCHOR["tma_lines"]
+    assert eng.sanitizer.n_issues == 0      # pristine kernel, zero noise
 
 
 # kernel-program grid: all four registered kernels, lowered through the

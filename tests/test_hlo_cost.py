@@ -3,7 +3,6 @@ match XLA ground truth where XLA is correct (unrolled) and fix it where it
 is not (scanned while bodies)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.utils.hlo import collective_bytes, hlo_cost, xla_cost_analysis

@@ -8,7 +8,6 @@ import pytest
 pytestmark = pytest.mark.slow  # jax model-zoo smoke: minutes, not tier-1
 
 from repro.configs import registry
-from repro.configs.base import SHAPES
 from repro.models import api, attention, mamba, rwkv
 from repro.train.loss import chunked_cross_entropy
 

@@ -6,7 +6,6 @@ import textwrap
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")  # optional dev dep: degrade, don't die
 from hypothesis import given, settings, strategies as st
