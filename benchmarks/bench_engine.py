@@ -315,7 +315,8 @@ def write_baseline(sink: Sink, rows: list) -> None:
     history.append(entry)
     baseline = {"bench": "engine", "rows": rows, "derived": sink.derived,
                 "history": history}
-    BASELINE_PATH.write_text(json.dumps(baseline, indent=1) + "\n")
+    from repro.utils.ioutil import atomic_write_text
+    atomic_write_text(str(BASELINE_PATH), json.dumps(baseline, indent=1) + "\n")
 
 
 if __name__ == "__main__":

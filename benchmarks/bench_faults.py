@@ -1,0 +1,96 @@
+"""(ours) Variability sensitivity — perturbation-magnitude degradation curves.
+
+The paper validates Sim-FA under ideal locked-frequency conditions; this
+bench asks how fast the prediction degrades as measured Hopper variability
+(``core.machine.H800_VARIABILITY``) is scaled up: one latency /
+stall-attribution row per (scale, seed), collapsed to a mean/min/max
+degradation curve, plus a straggler-deadline calibration from the modeled
+step-time distribution (``serve.engine.StragglerPolicy.from_samples``).
+
+``--smoke`` (CI fault-matrix step) shrinks the workload and additionally
+runs the scheduler x plan matrix: the identity plan must be cycle-exact
+across all three schedulers, and seeded perturbed runs must reproduce.
+"""
+from __future__ import annotations
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.machine import H800
+from repro.core.simfa import simulate_fa3
+from repro.faults import FaultPlan, measured_variability
+from repro.faults.sensitivity import (
+    DEFAULT_SCALES,
+    degradation_curve,
+    sensitivity_sweep,
+    step_time_samples,
+)
+
+from benchmarks.common import Sink
+
+W = AttnWorkload(name="fa3_var", B=1, L=256, S=512, H_kv=2, G=2, D=128)
+W_SMOKE = AttnWorkload(name="fa3_var_smoke", B=1, L=128, S=256, H_kv=1,
+                       G=1, D=128)
+SCHEDULERS = ("event", "waiter", "broadcast")
+
+
+def _scheduler_matrix(sink: Sink, w) -> None:
+    """Scheduler x plan matrix (the CI gate): identity bit-exact across
+    schedulers, seeded perturbation reproducible under each."""
+    base = None
+    for sched in SCHEDULERS:
+        opts = {"scheduler": sched}
+        r_id = simulate_fa3(w, H800, faults=FaultPlan.identity(),
+                            engine_opts=opts)
+        r_p1 = simulate_fa3(w, H800, faults=measured_variability(seed=3),
+                            engine_opts=opts)
+        r_p2 = simulate_fa3(w, H800, faults=measured_variability(seed=3),
+                            engine_opts=opts)
+        if base is None:
+            base = r_id.cycles
+        assert r_id.cycles == base, \
+            f"identity plan not bit-exact under {sched}"
+        assert r_p1.cycles == r_p2.cycles, \
+            f"seeded run not reproducible under {sched}"
+        sink.row(matrix=sched, identity_cycles=int(r_id.cycles),
+                 perturbed_cycles=int(r_p1.cycles))
+
+
+def run(sink: Sink, smoke: bool = False):
+    w = W_SMOKE if smoke else W
+    scales = (0.0, 1.0) if smoke else DEFAULT_SCALES
+    seeds = (0,) if smoke else (0, 1, 2)
+    rows = sensitivity_sweep(w, H800, fidelity="auto", scales=scales,
+                             seeds=seeds, record_stalls=not smoke)
+    for r in rows:
+        sink.row(**{k: v for k, v in r.items() if v is not None})
+
+    curve = degradation_curve(rows)
+    assert curve[0]["mean"] == 1.0, \
+        "scale-0 must be bit-exact with the unperturbed model"
+    for p in curve:
+        sink.derive(**{f"degradation_x{p['scale']:g}": round(p["mean"], 4)})
+    sink.derive(max_degradation=round(curve[-1]["max"], 4))
+
+    # straggler-deadline calibration from the modeled distribution
+    samples = step_time_samples(w, H800, scale=1.0, n=4 if smoke else 12)
+    from repro.serve.engine import StragglerPolicy
+    pol = StragglerPolicy.from_samples(samples)
+    sink.derive(straggler_expected_step_us=round(pol.expected_step_s * 1e6, 1),
+                straggler_factor=round(pol.factor, 3))
+
+    if smoke:
+        _scheduler_matrix(sink, w)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload, 2 scales, plus the scheduler x "
+                         "plan bit-exactness matrix (the CI gate)")
+    args = ap.parse_args()
+    sink = Sink("faults")
+    run(sink, smoke=args.smoke)
+    out = sink.finish()
+    print(f"faults bench ok ({out['wall_s']}s): {len(out['rows'])} rows -> "
+          f"results/bench/faults.json; derived={out['derived']}")

@@ -60,8 +60,8 @@ class Sink:
     def finish(self) -> Dict[str, Any]:
         out = {"bench": self.name, "rows": self.rows, "derived": self.derived,
                "wall_s": round(time.time() - self.t0, 2)}
-        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-        (RESULTS_DIR / f"{self.name}.json").write_text(json.dumps(out, indent=1))
+        from repro.utils.ioutil import atomic_write_json
+        atomic_write_json(str(RESULTS_DIR / f"{self.name}.json"), out)
         return out
 
 

@@ -17,6 +17,7 @@ writes ``results/bench/<name>.json`` per bench.
 | Table 5 ablations                  | ablations        |
 | (ours) Pallas kernels vs oracle    | kernels          |
 | (ours) dry-run roofline terms      | roofline         |
+| (ours) variability degradation     | faults           |
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ BENCHES = [
     "roofline",
     "gantt",
     "ablations",
+    "faults",
     "fa3_latency",
     "engine",
     "traffic_l2",
@@ -42,7 +44,8 @@ BENCHES = [
 ]
 
 FAST_SKIP = {"tma_bandwidth", "mshr", "tma_latency",   # slowest microbenches
-             "engine"}   # full-fidelity launch + broadcast-fallback rerun
+             "engine",   # full-fidelity launch + broadcast-fallback rerun
+             "faults"}   # 15-point Monte-Carlo sensitivity sweep
 
 
 def main(argv=None) -> int:

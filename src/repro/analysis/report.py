@@ -1,8 +1,6 @@
 """Text / JSON rendering for stall attribution and what-if sweeps."""
 from __future__ import annotations
 
-import json
-import os
 from dataclasses import asdict, is_dataclass
 from typing import Dict, List, Sequence
 
@@ -92,8 +90,5 @@ def save_json(path: str, obj, *, manifest=True) -> None:
                 obj = {**obj, "manifest": stamp}
         elif isinstance(obj, list):
             obj = {"manifest": stamp, "rows": obj}
-    d = os.path.dirname(path)
-    if d:
-        os.makedirs(d, exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(obj, f, indent=1, default=default)
+    from repro.utils.ioutil import atomic_write_json
+    atomic_write_json(path, obj, indent=1, default=default)

@@ -160,6 +160,7 @@ class TensorCoreEngine:
         self.waiters: List[WGThread] = []   # threads parked on a buffer slot
         self.busy_until = 0
         self.busy_cycles = 0
+        self.faults = sm.engine.faults
 
     def can_accept(self) -> bool:
         return len(self.buffer) < self.cfg.wgmma_issue_buffer
@@ -182,6 +183,9 @@ class TensorCoreEngine:
         # TPU mode: the tracegen precomputes MXU cycles into ins.cycles.
         dur = ins.cycles if ins.cycles > 0 else max(
             1, int(round(ins.n / self.cfg.wgmma_n_cycles_divisor)))
+        fl = self.faults
+        if fl is not None:
+            dur = fl.stretch(start, self.sm.sm_id, dur)
         self.busy_until = start + dur
         self.busy_cycles += dur
         if self.sm.tracer is not None:
@@ -214,6 +218,7 @@ class TMAEngine:
         self.eng = sm.engine
         self.lrc = lrc
         self.tmaps = tmaps
+        self.faults = sm.engine.faults
         # frozen-config hot constants, hoisted off the issue path
         self._lpc = cfg.tma_lines_per_cycle
         self._cap = cfg.tma_max_inflight_lines
@@ -250,6 +255,9 @@ class TMAEngine:
         # TensorMap setup path -> only the common launch latency applies.
         setup = self.cfg.tma_launch_latency + (
             0 if ins.bulk else self.cfg.tma_tmap_setup_latency)
+        fl = self.faults
+        if fl is not None:
+            setup += fl.tma_extra()
         job = {"lines": deque(lines), "left": len(lines), "th": th,
                "sid": ins.sid, "write": False, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
@@ -266,6 +274,9 @@ class TMAEngine:
         # stores bypass the TensorMap setup path only when bulk (Fig. 2);
         # FA3's O store uses a TensorMap -> full setup
         setup = self.cfg.tma_launch_latency + self.cfg.tma_tmap_setup_latency
+        fl = self.faults
+        if fl is not None:
+            setup += fl.tma_extra()
         job = {"lines": deque(lines), "left": len(lines), "th": th,
                "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
@@ -289,7 +300,16 @@ class TMAEngine:
         def done():
             job["left"] -= 1
             if job["left"] == 0:
-                self._finish(job)
+                fl = eng.faults
+                d = fl.finish_delay() if fl is not None else 0
+                if d:
+                    # delayed async-completion delivery: the last line has
+                    # landed but the mbarrier signal / group retirement only
+                    # becomes visible d cycles later.  The job stays in
+                    # self.jobs (empty line deque -> _issue skips it).
+                    self.evq.push(eng.cycle + d, self._finish, job)
+                else:
+                    self._finish(job)
                 if (self.lines_queued and self._kick_scheduled
                         and eng.cycle > self._issue_cycle):
                     self._issue(eng.cycle)
@@ -425,6 +445,7 @@ class SM:
         self.broadcast = engine.broadcast_wake
         self.event = engine.scheduler == "event"
         self.san = engine.sanitizer
+        self.faults = engine.faults
         self.ctas: List[CTA] = []
         self._threads: List[WGThread] = []   # flat resident non-DONE threads
         # event-mode issue-eligible queue: READY, non-busy, non-done threads
@@ -684,7 +705,9 @@ class SM:
             cta.bar_arrivals[ins.bid] = cta.bar_arrivals.get(ins.bid, 0) + 1
             self.notify_bar(cta, ins.bid)
         elif op == isa.BUBBLES:
-            until = cycle + ins.cycles
+            fl = self.faults
+            until = cycle + (ins.cycles if fl is None
+                             else fl.stretch(cycle, self.sm_id, ins.cycles))
             th.busy_until = until
             if self.event:
                 # park on a per-SM timer: one coalesced wake per (cycle, SM)
@@ -738,7 +761,8 @@ class Engine:
                  seed: int = 0, direct_hbm: bool = False, tracer=None,
                  broadcast_wake: bool = False,
                  scheduler: Optional[str] = None,
-                 counters=None, sanitize: bool = False):
+                 counters=None, sanitize: bool = False,
+                 faults=None, watchdog=None):
         if scheduler is None:
             scheduler = "broadcast" if broadcast_wake else "event"
         elif scheduler not in self.SCHEDULERS:
@@ -781,6 +805,33 @@ class Engine:
         # loop concludes nothing can ever progress again (deadlocked=True);
         # deliberately NOT part of stats() — diagnostics, not simulation
         self.deadlock_info: Optional[dict] = None
+        # opt-in seeded fault/variability session (repro.faults): latency
+        # jitter, SM slowdown/offlining, throttle windows, delayed async
+        # completions.  Same hook discipline as the counter sink: every
+        # site costs one is-None test when off, and an identity plan draws
+        # +0 extra cycles everywhere, so attaching it is bit-exact.  The
+        # session's RNG is private — the engine RNG stream is untouched.
+        self.faults = None
+        if faults is not None:
+            from repro.faults.session import make_session
+            self.faults = make_session(faults, self.n_sms)
+            fl = self.faults
+            self.dram.faults = fl
+            self.lrc.faults = fl
+            if self.l2 is not self.lrc:     # sliced L2 (not DirectHBM)
+                self.l2.faults = fl
+                for sl in self.l2.slices:
+                    sl.faults = fl
+        # opt-in run watchdog (repro.faults.watchdog): wall-clock /
+        # sim-cycle budgets with clean abort + partial-result salvage.
+        # Read-only over simulated state; a run that finishes under budget
+        # is bit-exact with an unwatched run.
+        self.watchdog = None
+        if watchdog is not None:
+            from repro.faults.watchdog import make_watchdog
+            self.watchdog = make_watchdog(watchdog)
+        self.aborted = False
+        self.abort_info: Optional[dict] = None
         self.broadcast_wake = scheduler == "broadcast"
         self.sms = [SM(i, machine, self) for i in range(self.n_sms)]
         self.pending: deque = deque()
@@ -805,7 +856,11 @@ class Engine:
         self._dispatch()
 
     def _dispatch(self, parent: Optional[int] = None):
+        fl = self.faults
+        off = fl.offline if fl is not None and fl.offline else None
         for sm in self.sms:
+            if off is not None and sm.sm_id in off:
+                continue                 # fenced/dead SM: no CTAs dispatched
             added = False
             while self.pending and sm.has_slot():
                 trace = self.pending.popleft()
@@ -850,11 +905,15 @@ class Engine:
         sms = self.sms
         evq = self.evq
         snk = self.counters
+        wd = self.watchdog
         while self.cycle < max_cycles:
             evq.pop_ready(self.cycle)
             if snk is not None and self.cycle >= snk.next_sample:
                 snk.sample(self.cycle, self)
             if self.retired == self.launched and not self.pending:
+                break
+            if wd is not None and wd.tripped(self.cycle):
+                self._abort(wd)
                 break
             progressed = False
             if active:
@@ -879,11 +938,12 @@ class Engine:
                 if not wake:
                     self._flag_deadlock()
                     break
-                self.cycle = min(wake)
+                self.cycle = min(wake) if wd is None else wd.clamp(min(wake))
                 for sm in sms:
                     self.mark_active(sm)
             else:
-                self.cycle = max(self.cycle + 1, nxt)
+                nxt = max(self.cycle + 1, nxt)
+                self.cycle = nxt if wd is None else wd.clamp(nxt)
                 if broadcast:
                     # legacy rescan: re-mark every SM after each time jump
                     for sm in sms:
@@ -911,11 +971,15 @@ class Engine:
         heap = self._active_heap
         flags = self._active_flags
         snk = self.counters
+        wd = self.watchdog
         while self.cycle < max_cycles:
             evq.pop_ready(self.cycle)
             if snk is not None and self.cycle >= snk.next_sample:
                 snk.sample(self.cycle, self)
             if self.retired == self.launched and not self.pending:
+                break
+            if wd is not None and wd.tripped(self.cycle):
+                self._abort(wd)
                 break
             progressed = False
             if heap:
@@ -942,12 +1006,23 @@ class Engine:
                 # make progress again (busy sleepers hold queue timers)
                 self._flag_deadlock()
                 break
-            self.cycle = max(self.cycle + 1, nxt)
+            nxt = max(self.cycle + 1, nxt)
+            self.cycle = nxt if wd is None else wd.clamp(nxt)
         if snk is not None:
             snk.finish(self.cycle, self)
         return self.stats()
 
     # ------------------------------------------------------------------
+    def _abort(self, wd):
+        """Watchdog trip: break the run loop cleanly and salvage a partial
+        result (CTA census, blocked-thread snapshot, fault stats) instead
+        of hanging or dying.  Counters still get their finish() sample —
+        the loops run it after the break — so PM timelines up to the abort
+        survive too."""
+        from repro.faults.watchdog import salvage
+        self.aborted = True
+        self.abort_info = salvage(self, wd.reason, wd.wall_s())
+
     def _flag_deadlock(self):
         """Both run loops land here when nothing can ever progress again.
         Attaches the wait-for-graph explanation (which thread blocks on

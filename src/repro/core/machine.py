@@ -92,3 +92,23 @@ TPU_V5E = TPUMachine()
 
 def h800_variant(**kw) -> GPUMachine:
     return replace(H800, **kw)
+
+
+# Measured Hopper variability envelopes (PAPERS.md microbenchmarking
+# studies: arxiv 2501.12084 reports the L2 near/far and DRAM latency
+# spreads around the means Table 2 pins; arxiv 2402.13499 the sustained
+# clock excursions under power capping).  Kept out of ``GPUMachine`` on
+# purpose: the calibrated constant-parameter model stays the paper's
+# locked-frequency ideal, and ``repro.faults.measured_variability`` turns
+# these envelopes into a seeded :class:`~repro.faults.FaultPlan` when a
+# run should sample realistic spread instead.  Values are one-standard-
+# deviation extra-latency envelopes in cycles (latencies) or a sustained
+# derate factor (throttle).
+H800_VARIABILITY = {
+    "dram_jitter_std": 24.0,        # ~6% of the 400-cycle DRAM latency
+    "l2_near_jitter_std": 10.0,     # near-partition lookup spread
+    "l2_far_jitter_std": 22.0,      # far-partition (cross-GPC) spread
+    "tma_jitter_std": 6.0,          # descriptor/launch path spread
+    "completion_jitter_std": 4.0,   # async-completion delivery spread
+    "throttle_factor": 1.06,        # sustained power-cap compute derate
+}

@@ -106,6 +106,7 @@ class DRAM:
         self.bytes_served = 0
         self.busy_cycles = 0.0          # channel-occupied cycles (observable
                                         # only: feeds obs counter timelines)
+        self.faults = None              # repro.faults.FaultSession hook
 
     def access(self, cycle: int, line: int, cb: Callable):
         ch = (line // self.cfg.line_bytes) % self.channels
@@ -113,7 +114,10 @@ class DRAM:
         self.free_at[ch] = start + self.service
         self.bytes_served += self.cfg.line_bytes
         self.busy_cycles += self.service
-        self.evq.push(int(start + self.service + self.cfg.dram_latency), cb)
+        fl = self.faults
+        lat = (self.cfg.dram_latency if fl is None
+               else self.cfg.dram_latency + fl.dram_extra())
+        self.evq.push(int(start + self.service + lat), cb)
 
 
 class L2Slice:
@@ -136,6 +140,7 @@ class L2Slice:
         self.rc_inserts = 0
         self.mshr_peak = 0              # high-water outstanding misses
                                         # (observable only: MSHR pressure)
+        self.faults = None              # repro.faults.FaultSession hook
 
     @property
     def occupancy(self) -> float:
@@ -162,6 +167,9 @@ class L2Slice:
     def _access(self, cycle: int, line: int, far: bool, cb: Callable,
                 write: bool = False):
         lat = self.cfg.l2_far_latency if far else self.cfg.l2_near_latency
+        fl = self.faults
+        if fl is not None:
+            lat += fl.l2_extra(far)
         if line in self.tags:
             self.hits += 1
             self.tags.move_to_end(line)
@@ -209,6 +217,7 @@ class L2Cache:
         self.n = n
         self.rng = random.Random(seed)
         self.requests = 0
+        self.faults = None              # repro.faults.FaultSession hook
 
     def slice_of(self, line_addr: int) -> int:
         line = line_addr // self.cfg.line_bytes
@@ -240,7 +249,10 @@ class L2Cache:
                 else:
                     mirror.hits += 1
                     mirror.tags.move_to_end(line_addr)
-                    self.evq.push(cycle + self.cfg.l2_near_latency, cb)
+                    fl = self.faults
+                    lat = (self.cfg.l2_near_latency if fl is None
+                           else self.cfg.l2_near_latency + fl.l2_extra(False))
+                    self.evq.push(cycle + lat, cb)
                     return
             elif (not write and line_addr in sl.tags
                   and mirror.occupancy < self.cfg.rc_occupancy_threshold
@@ -279,6 +291,7 @@ class LRC:
         # the slice hash and partition of a line never change, so the hot
         # path pays one dict hit instead of recomputing hash + partition
         self._meta: Dict[int, tuple] = {}
+        self.faults = None              # repro.faults.FaultSession hook
         # machine constants hoisted off cfg: read once per request, not via
         # an attribute chain
         self._enabled = cfg.lrc_enabled
@@ -330,6 +343,8 @@ class LRC:
         rc_thresh = self._rc_thresh
         rc_prob = self._rc_prob
         rng = l2.rng.random
+        fl = self.faults       # fused L2-hit paths bypass L2Slice._access,
+                               # so the jitter hook is applied inline here
         for line_addr in lines:
             key = (pair, line_addr)
             waiters = pending.get(key)
@@ -350,7 +365,9 @@ class LRC:
                 if not sl.stalled and line_addr in sl.tags:
                     sl.hits += 1
                     sl.tags.move_to_end(line_addr)
-                    evq.push(cycle + near_lat, fanout, key)
+                    lat = (near_lat if fl is None
+                           else near_lat + fl.l2_extra(False))
+                    evq.push(cycle + lat, fanout, key)
                     continue
                 sl.access(cycle, line_addr, False, partial(fanout, key))
                 continue
@@ -359,7 +376,9 @@ class LRC:
                 if line_addr in mtags:
                     mirror.hits += 1
                     mtags.move_to_end(line_addr)
-                    evq.push(cycle + near_lat, fanout, key)
+                    lat = (near_lat if fl is None
+                           else near_lat + fl.l2_extra(False))
+                    evq.push(cycle + lat, fanout, key)
                     continue
                 if (line_addr in sl.tags
                         and mirror.occupancy < rc_thresh
@@ -369,7 +388,9 @@ class LRC:
             if not sl.stalled and line_addr in sl.tags:
                 sl.hits += 1
                 sl.tags.move_to_end(line_addr)
-                evq.push(cycle + far_lat, fanout, key)
+                lat = (far_lat if fl is None
+                       else far_lat + fl.l2_extra(True))
+                evq.push(cycle + lat, fanout, key)
                 continue
             sl.access(cycle, line_addr, True, partial(fanout, key))
 
@@ -398,11 +419,14 @@ class LRC:
             m = self._line_meta(line_addr)
         sl, home_part, mirror = m
         fanout = self._fanout
+        fl = self.faults
         if home_part == (0 if sm_id < self._half_sms else 1):
             if not sl.stalled and line_addr in sl.tags:
                 sl.hits += 1
                 sl.tags.move_to_end(line_addr)
-                l2.evq.push(cycle + self._near, fanout, key)
+                lat = (self._near if fl is None
+                       else self._near + fl.l2_extra(False))
+                l2.evq.push(cycle + lat, fanout, key)
                 return
             sl.access(cycle, line_addr, False, partial(fanout, key))
             return
@@ -411,7 +435,9 @@ class LRC:
             if line_addr in mtags:
                 mirror.hits += 1
                 mtags.move_to_end(line_addr)
-                l2.evq.push(cycle + self._near, fanout, key)
+                lat = (self._near if fl is None
+                       else self._near + fl.l2_extra(False))
+                l2.evq.push(cycle + lat, fanout, key)
                 return
             if (line_addr in sl.tags
                     and mirror.occupancy < self._rc_thresh
@@ -421,7 +447,9 @@ class LRC:
         if not sl.stalled and line_addr in sl.tags:
             sl.hits += 1
             sl.tags.move_to_end(line_addr)
-            l2.evq.push(cycle + self._far, fanout, key)
+            lat = (self._far if fl is None
+                   else self._far + fl.l2_extra(True))
+            l2.evq.push(cycle + lat, fanout, key)
             return
         sl.access(cycle, line_addr, True, partial(fanout, key))
 

@@ -60,6 +60,12 @@ class SimResult:
                                           # snapshot when deadlocked
     hazards: Optional[list] = None     # analysis.hazards.HazardIssue list
                                        # when the engine ran sanitize=True
+    aborted: bool = False              # watchdog tripped mid-run; cycles /
+                                       # traffic below are the salvaged
+                                       # partial run, not a completed launch
+    abort_info: Optional[dict] = None  # faults.watchdog.salvage snapshot
+    fault_stats: Optional[dict] = None  # faults.FaultSession.stats() when a
+                                        # fault plan was attached
 
 
 def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
@@ -81,7 +87,8 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
                  record_counters: bool = False,
                  counter_window: int = 256,
                  engine_opts: Optional[dict] = None,
-                 kernel: Union[str, KernelSpec] = "fa3") -> SimResult:
+                 kernel: Union[str, KernelSpec] = "fa3",
+                 faults=None, watchdog=None) -> SimResult:
     """Simulate one kernel launch (name kept for history; ``kernel=``
     dispatches through the registry, defaulting to the FA3 ping-pong the
     driver originally hardcoded).  ``tiling=None`` takes the spec's
@@ -91,8 +98,21 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     ``record_counters=True`` attaches an :class:`obs.counters.CounterSink`
     (windowed PM-counter timelines on ``SimResult.counters``) to the first
     simulated engine run; it is bit-neutral — cycles and stats do not
-    change.  Every result carries an ``obs.manifest`` provenance stamp."""
+    change.  Every result carries an ``obs.manifest`` provenance stamp.
+
+    ``faults=`` attaches a :class:`repro.faults.FaultPlan` (or its
+    ``to_dict`` form) to every simulated engine run — identity plans are
+    bit-exact, seeded plans reproducible.  ``watchdog=`` attaches a
+    :class:`repro.faults.Watchdog` budget; on trip the result comes back
+    with ``aborted=True`` and the salvaged partial state in
+    ``abort_info`` instead of hanging."""
     spec = kernel_registry.get(kernel)
+    if faults is not None or watchdog is not None:
+        engine_opts = dict(engine_opts or {})
+        if faults is not None:
+            engine_opts.setdefault("faults", faults)
+        if watchdog is not None:
+            engine_opts.setdefault("watchdog", watchdog)
     tiling = tiling if tiling is not None else spec.default_tiling()
     # total CTA count is analytic; only the traces we will actually run are
     # materialized (hierarchical mode simulates the first two waves only)
@@ -124,7 +144,10 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
             counters=snk, manifest=manifest,
             deadlock_info=eng.deadlock_info,
             hazards=(eng.sanitizer.issues
-                     if eng.sanitizer is not None else None))
+                     if eng.sanitizer is not None else None),
+            aborted=eng.aborted, abort_info=eng.abort_info,
+            fault_stats=(eng.faults.stats()
+                         if eng.faults is not None else None))
 
     # hierarchical: n_sub SMs stand in for the machine; two-wave composition
     per_wave_sub = n_sub * cfg.occupancy_limit
@@ -163,7 +186,11 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         counters=snk, manifest=manifest,
         deadlock_info=eng1.deadlock_info or eng2.deadlock_info,
         hazards=(eng1.sanitizer.issues
-                 if eng1.sanitizer is not None else None))
+                 if eng1.sanitizer is not None else None),
+        aborted=eng1.aborted or eng2.aborted,
+        abort_info=eng1.abort_info or eng2.abort_info,
+        fault_stats=(eng1.faults.stats()
+                     if eng1.faults is not None else None))
 
 
 def _manifest(cfg, w, spec, tiling, eng, fidelity, snk, wall_s, cycles):
@@ -172,7 +199,8 @@ def _manifest(cfg, w, spec, tiling, eng, fidelity, snk, wall_s, cycles):
         scheduler=eng.scheduler, fidelity=fidelity,
         counter_window=snk.window if snk is not None else None,
         wall_s=wall_s, sim_cycles=int(cycles),
-        events_popped=eng.evq.popped)
+        events_popped=eng.evq.popped,
+        faults=eng.faults.plan if eng.faults is not None else None)
 
 
 # preferred, kernel-neutral name

@@ -74,6 +74,9 @@ class CounterSink:
         self.tma_inflight: List[int] = []       # instantaneous
         self.resident_ctas: List[int] = []      # instantaneous
         self.tc_busy: Dict[int, List[int]] = {}
+        # cumulative fault-injected extra cycles per category; empty lists
+        # (and empty timelines) when the engine runs without a fault plan
+        self.fault_injected: Dict[str, List[int]] = {}
         # (cta_idx, ring name) -> [(cycle, filled stages)], instantaneous
         self.ring_occupancy: Dict[Tuple[int, str], List[Tuple[int, int]]] = {}
         self.ring_depths: Dict[Tuple[int, str], int] = {}   # declared stages
@@ -125,6 +128,10 @@ class CounterSink:
         self.tma_lines.append(lines)
         self.tma_inflight.append(inflight)
         self.resident_ctas.append(ctas)
+        fl = getattr(eng, "faults", None)
+        if fl is not None:
+            for cat, v in fl.injected.items():
+                self.fault_injected.setdefault(cat, []).append(v)
 
     def finish(self, cycle: int, eng) -> None:
         """Final closing sample — run once by the engine before it returns
@@ -223,6 +230,17 @@ class CounterSink:
         declared stage count (``ring_depths``)."""
         return {k: max(d for _, d in v) if v else 0
                 for k, v in self.ring_occupancy.items()}
+
+    def fault_injection_timeline(self, cat: str
+                                 ) -> List[Tuple[int, int, int]]:
+        """``[(c0, c1, extra_cycles), ...]`` fault-injected latency per
+        window for one category (``dram``/``l2``/``tma``/``completion``/
+        ``compute``); integrates exactly to the session's injected total.
+        Empty when the run had no fault plan attached."""
+        series = self.fault_injected.get(cat)
+        if not series:
+            return []
+        return self._deltas(series)
 
     def avg_resident_ctas(self) -> float:
         """Time-weighted average resident CTA count (occupancy numerator)."""

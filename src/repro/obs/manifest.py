@@ -102,6 +102,7 @@ def build_manifest(*,
                    sim_cycles: Optional[int] = None,
                    events_popped: Optional[int] = None,
                    wall_breakdown: Optional[Dict[str, float]] = None,
+                   faults: Any = None,
                    extra: Optional[Dict[str, Any]] = None
                    ) -> Dict[str, Any]:
     """Assemble a provenance manifest dict.  All sections are optional;
@@ -143,6 +144,15 @@ def build_manifest(*,
             m["events_per_s"] = round(events_popped / wall_s, 1)
     if wall_breakdown is not None:
         m["wall_breakdown"] = wall_breakdown
+    if faults is not None:
+        # fault/variability provenance: a perturbed number is only
+        # attributable if the artifact says which plan + seed produced it
+        fd = faults.to_dict() if hasattr(faults, "to_dict") else dict(faults)
+        m["fault_plan_hash"] = _hash(fd)
+        m["fault_seed"] = fd.get("seed")
+        m["fault_plan"] = {"name": fd.get("name") or None,
+                           "kinds": sorted({p.get("kind") for p in
+                                            fd.get("perturbations", ())})}
     if extra:
         m.update(extra)
     return m

@@ -79,6 +79,14 @@ def build_report(result, cfg, *, workload=None,
     hz = getattr(result, "hazards", None)
     if hz:
         rep["hazards"] = [i.render() for i in hz]
+    fs = getattr(result, "fault_stats", None)
+    if fs is not None:
+        rep["faults"] = fs       # faults.FaultSession.stats() dict
+    if getattr(result, "aborted", False):
+        ai = getattr(result, "abort_info", None) or {}
+        rep["abort"] = {k: ai.get(k) for k in
+                        ("reason", "cycle", "wall_s", "launched", "retired",
+                         "in_flight", "pending")}
 
     snk = getattr(result, "counters", None)
     if snk is not None and snk.cycles:
@@ -133,7 +141,15 @@ def render_report(rep: Dict[str, Any]) -> str:
     L.append("=" * len(hdr))
     L.append(f"  cycles {rep['cycles']:>12.0f}    latency"
              f" {rep['latency_us']:.1f} us"
-             + ("    ** DEADLOCKED **" if rep.get("deadlocked") else ""))
+             + ("    ** DEADLOCKED **" if rep.get("deadlocked") else "")
+             + ("    ** ABORTED **" if rep.get("abort") else ""))
+    if rep.get("abort"):
+        ab = rep["abort"]
+        L.append(f"  watchdog abort ({ab.get('reason')}): cycle"
+                 f" {ab.get('cycle')}, {ab.get('retired')}/"
+                 f"{ab.get('launched')} CTAs retired,"
+                 f" {ab.get('pending')} pending,"
+                 f" {ab.get('wall_s')} s wall")
     if rep.get("deadlock"):
         from repro.analysis.hazards import render_deadlock
         L.extend(render_deadlock(rep["deadlock"]))
@@ -168,6 +184,21 @@ def render_report(rep: Dict[str, Any]) -> str:
         L.append("  -- stall breakdown " + "-" * 39)
         for k, v in sorted(st["buckets"].items(), key=lambda kv: -kv[1]):
             L.append(f"  {k:<18s} {v:>12.1f} cycles")
+    if "faults" in rep:
+        f = rep["faults"]
+        plan = f.get("plan", {})
+        L.append("  -- fault injection " + "-" * 39)
+        L.append(f"  plan {plan.get('name') or '<unnamed>'}"
+                 f"  seed {plan.get('seed')}"
+                 + ("  (identity)" if plan.get("identity") else ""))
+        ev = f.get("injection_events", {})
+        for k, v in sorted(f.get("injected_cycles", {}).items(),
+                           key=lambda kv: -kv[1]):
+            if v:
+                L.append(f"  {k:<12s} +{v:>10d} cycles over"
+                         f" {ev.get(k, 0)} events")
+        if f.get("offline_sms"):
+            L.append(f"  offline SMs: {f['offline_sms']}")
     man = rep.get("manifest") or {}
     if man:
         L.append(f"  [{man.get('git_sha', '?')} @"

@@ -28,7 +28,6 @@ arrow's start (``s``) and finish (``f``) endpoints both exist.
 """
 from __future__ import annotations
 
-import json
 from typing import Any, Dict, List, Optional
 
 from repro.obs.labels import cta_of
@@ -89,8 +88,8 @@ def export_trace(path: str, trace=None, counters=None,
                  manifest: Optional[dict] = None, **kw) -> Dict[str, Any]:
     """Build and write the trace JSON to ``path``; returns the dict."""
     obj = build_trace(trace, counters, manifest, **kw)
-    with open(path, "w") as f:
-        json.dump(obj, f, separators=(",", ":"))
+    from repro.utils.ioutil import atomic_write_json
+    atomic_write_json(path, obj, indent=None, separators=(",", ":"))
     return obj
 
 

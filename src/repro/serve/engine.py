@@ -43,6 +43,25 @@ class StragglerPolicy:
             self.slow_steps += 1
         return slow
 
+    @classmethod
+    def from_samples(cls, samples, *, percentile: float = 0.99,
+                     factor_floor: float = 1.5) -> "StragglerPolicy":
+        """Calibrate from a sampled step-time distribution instead of a
+        hand-picked factor — the fleet-serving consumer of
+        ``repro.faults.sensitivity.step_time_samples``: Monte-Carlo the
+        decode step under a seeded variability plan, then set the deadline
+        where the *modeled* tail ends so only genuinely anomalous hosts
+        trip it.  Expectation is the sample median; the factor is the
+        p-``percentile``/median ratio (floored at ``factor_floor`` so a
+        tight distribution still tolerates scheduler noise)."""
+        xs = sorted(float(s) for s in samples)
+        if not xs:
+            return cls()
+        med = xs[len(xs) // 2]
+        hi = xs[min(len(xs) - 1, int(percentile * (len(xs) - 1)))]
+        factor = max(factor_floor, hi / med if med > 0 else factor_floor)
+        return cls(expected_step_s=med, factor=factor)
+
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 256,

@@ -1,0 +1,275 @@
+"""Fault injection & watchdog acceptance (docs/robustness.md).
+
+The load-bearing contracts:
+
+  * **identity is bit-exact** — ``Engine(faults=None)``, the explicit
+    identity plan, and ``measured_variability(scale=0)`` all reproduce the
+    pinned 73614-cycle full-fidelity FA3 anchor, under every scheduler.
+    The hooks are read-only when off, so attaching an identity plan draws
+    nothing and perturbs nothing.
+  * **seeded runs are reproducible** — a perturbed run is a pure function
+    of (plan, seed): same seed -> identical stats, different seed ->
+    different trajectory.
+  * **watchdog salvage** — a budgeted run aborts *at* the budget with a
+    usable post-mortem (CTA census, blocked-thread explanation), and an
+    untripped watchdog is bit-neutral.
+"""
+import pytest
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.engine import Engine
+from repro.core.machine import H800, h800_variant
+from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
+from repro.faults import (
+    CompletionDelay,
+    DramJitter,
+    FaultPlan,
+    Jitter,
+    L2Jitter,
+    SmOffline,
+    SmSlowdown,
+    ThrottleWindow,
+    TmaJitter,
+    Watchdog,
+    measured_variability,
+)
+
+SCHEDULERS = ("event", "waiter", "broadcast")
+
+# the pinned full-fidelity FA3 reference launch (see test_engine_equiv)
+FULL_ANCHOR = {"cycles": 73614, "dram_bytes": 4194304,
+               "l2_req_bytes": 31705728, "tma_lines": 565248}
+FULL_W = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+
+# small/fast launch for perturbation tests
+TINY_W = dict(B=1, L=128, S=256, H_kv=1, G=1, D=64)
+TINY_TILING = FA3Tiling(t_m=64, t_n=128, stages=2)
+
+
+def _run_tiny(faults=None, watchdog=None, n_sms=2, scheduler="event"):
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=TINY_TILING, **TINY_W)
+    eng = Engine(H800, n_sms=n_sms, mem_scale=n_sms / H800.num_sms,
+                 scheduler=scheduler, faults=faults, watchdog=watchdog)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    return eng, st
+
+
+# ---------------------------------------------------------------------------
+# identity / bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_identity_plan_bit_exact_on_full_anchor(scheduler):
+    """Attaching the identity FaultPlan must not move the pinned anchor by
+    a single cycle or byte, under every scheduler — the acceptance bar for
+    the read-only-when-off hook discipline."""
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **FULL_W)
+    eng = Engine(H800, scheduler=scheduler, faults=FaultPlan.identity())
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    assert {k: st[k] for k in FULL_ANCHOR} == FULL_ANCHOR
+    assert eng.faults.stats()["injected_cycles"] == {
+        k: 0 for k in eng.faults.stats()["injected_cycles"]}
+
+
+def test_scale_zero_variability_is_identity():
+    plan = measured_variability(scale=0)
+    assert plan.is_identity()
+    # and bit-exact against a no-plan run on the tiny launch
+    _, st_off = _run_tiny(faults=None)
+    _, st_on = _run_tiny(faults=plan)
+    assert st_on == st_off
+
+
+def test_no_plan_and_identity_plan_agree_everywhere():
+    for scheduler in SCHEDULERS:
+        _, st_off = _run_tiny(faults=None, scheduler=scheduler)
+        _, st_on = _run_tiny(faults=FaultPlan.identity(), scheduler=scheduler)
+        assert st_on == st_off, scheduler
+
+
+# ---------------------------------------------------------------------------
+# seeded reproducibility
+# ---------------------------------------------------------------------------
+
+def test_seeded_runs_reproducible():
+    plan = measured_variability(scale=2.0, seed=7)
+    eng_a, st_a = _run_tiny(faults=plan)
+    eng_b, st_b = _run_tiny(faults=plan)
+    assert st_a == st_b
+    assert eng_a.faults.stats() == eng_b.faults.stats()
+    # a different seed draws a different trajectory
+    eng_c, st_c = _run_tiny(faults=plan.with_seed(8))
+    assert (st_c["cycles"], eng_c.faults.stats()["injected_cycles"]) != \
+           (st_a["cycles"], eng_a.faults.stats()["injected_cycles"])
+    # and perturbation only ever adds latency
+    _, st_base = _run_tiny(faults=None)
+    assert st_a["cycles"] >= st_base["cycles"]
+    # traffic is untouched: jitter delays lines, it does not create them
+    for k in ("dram_bytes", "l2_req_bytes", "tma_lines"):
+        assert st_a[k] == st_base[k]
+
+
+def test_plan_dict_roundtrip():
+    plan = FaultPlan((
+        DramJitter(Jitter("lognormal", 40, 0.5)),
+        L2Jitter(Jitter("uniform", 10, 4), near=True, far=False),
+        TmaJitter(Jitter("constant", 3)),
+        CompletionDelay(Jitter("normal", 2, 1)),
+        SmSlowdown(factor=1.25, sms=(1,)),
+        SmOffline(sms=(0,)),
+        ThrottleWindow(t0=100, t1=200, factor=1.5),
+    ), seed=42, name="roundtrip")
+    assert FaultPlan.from_dict(plan.to_dict()) == plan
+    assert not plan.is_identity()
+
+
+def test_perturbation_kinds_all_inject():
+    """Each latency-perturbation category, attached alone, must record
+    events in its own bucket (the hooks are actually wired, per site)."""
+    cases = {
+        "dram": DramJitter(Jitter("constant", 20)),
+        "l2": L2Jitter(Jitter("constant", 8)),
+        "tma": TmaJitter(Jitter("constant", 4)),
+        "completion": CompletionDelay(Jitter("constant", 6)),
+        "compute": SmSlowdown(factor=1.5),
+    }
+    for cat, pert in cases.items():
+        eng, st = _run_tiny(faults=FaultPlan((pert,), seed=1))
+        stats = eng.faults.stats()
+        assert stats["injection_events"][cat] > 0, cat
+        assert stats["injected_cycles"][cat] > 0, cat
+        assert not eng.deadlocked, cat
+
+
+def test_sm_offline_completes_on_survivors():
+    plan = FaultPlan((SmOffline(sms=(0,)),))
+    eng, st = _run_tiny(faults=plan, n_sms=2)
+    assert not eng.deadlocked
+    assert eng.retired == eng.launched
+    for sm in eng.sms:
+        if sm.sm_id == 0:
+            assert not sm.ctas       # never dispatched to
+    _, st_base = _run_tiny(faults=None, n_sms=2)
+    assert st["cycles"] >= st_base["cycles"]    # half the chip, never faster
+    # offlining the whole chip is a config error, not a hang
+    with pytest.raises(ValueError):
+        _run_tiny(faults=FaultPlan((SmOffline(sms=(0, 1)),)), n_sms=2)
+
+
+def test_throttle_window_slows_only_inside_window():
+    eng, st = _run_tiny(
+        faults=FaultPlan((ThrottleWindow(t0=0, t1=10 ** 9, factor=2.0),)))
+    _, st_base = _run_tiny(faults=None)
+    assert st["cycles"] > st_base["cycles"]
+    # a window entirely after the run is the identity in effect
+    eng2, st2 = _run_tiny(
+        faults=FaultPlan((ThrottleWindow(t0=10 ** 9, t1=2 * 10 ** 9,
+                                         factor=2.0),)))
+    assert st2 == st_base
+    assert eng2.faults.stats()["injected_cycles"]["compute"] == 0
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_cycle_budget_aborts_at_budget_with_salvage():
+    eng, st = _run_tiny(watchdog=Watchdog(max_cycles=2000))
+    assert eng.aborted
+    assert not eng.deadlocked
+    assert st["cycles"] == 2000         # jump clamped: lands AT the budget
+    info = eng.abort_info
+    assert info["reason"] == "cycle_budget"
+    assert info["cycle"] == 2000
+    assert info["launched"] > info["retired"]
+    assert info["in_flight"] == info["launched"] - info["retired"]
+    assert info["census"], "salvage must carry the resident-CTA census"
+    assert "blocked" in info            # explain_deadlock-style post-mortem
+
+
+def test_watchdog_wall_budget_aborts():
+    # deadline already expired at the first check -> immediate clean abort
+    eng, st = _run_tiny(watchdog=Watchdog(max_wall_s=1e-9, check_every=1))
+    assert eng.aborted
+    assert eng.abort_info["reason"] == "wall_budget"
+    assert st["cycles"] < 2000
+
+
+def test_untripped_watchdog_is_bit_neutral():
+    for scheduler in SCHEDULERS:
+        _, st_off = _run_tiny(scheduler=scheduler)
+        eng, st_on = _run_tiny(
+            watchdog=Watchdog(max_cycles=10 ** 9, max_wall_s=3600),
+            scheduler=scheduler)
+        assert not eng.aborted
+        assert st_on == st_off, scheduler
+
+
+def test_watchdog_salvages_faulted_run():
+    """Budget trip on a perturbed run: the salvage carries the fault stats
+    accumulated up to the abort (the sweep-harness consumer)."""
+    eng, st = _run_tiny(faults=measured_variability(scale=4.0),
+                        watchdog=Watchdog(max_cycles=3000))
+    assert eng.aborted
+    assert "faults" in eng.abort_info
+    inj = eng.abort_info["faults"]["injected_cycles"]
+    assert sum(inj.values()) > 0
+
+
+def test_simulate_forwards_abort_onto_result():
+    from repro.core.simfa import simulate_fa3
+    w = AttnWorkload(name="wd", B=1, L=128, S=256, H_kv=1, G=1, D=128)
+    r = simulate_fa3(w, H800, fidelity="full",
+                     faults={"perturbations": [], "seed": 0},
+                     watchdog={"max_cycles": 1500})
+    assert r.aborted
+    assert r.abort_info["reason"] == "cycle_budget"
+    assert r.fault_stats is not None
+    # and the obs report renders an abort section without blowing up
+    from repro.obs.report import build_report, render_report
+    rep = build_report(r, H800, workload=w)
+    assert rep["abort"]["reason"] == "cycle_budget"
+    assert "** ABORTED **" in render_report(rep)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity driver + straggler calibration
+# ---------------------------------------------------------------------------
+
+def test_sensitivity_sweep_degradation_curve():
+    from repro.faults.sensitivity import degradation_curve, sensitivity_sweep
+    w = AttnWorkload(name="sens", B=1, L=128, S=256, H_kv=1, G=1, D=64)
+    cfg = h800_variant(num_sms=8)
+    rows = sensitivity_sweep(w, cfg, fidelity="full", scales=(0.0, 2.0),
+                             seeds=(0, 1), record_stalls=False)
+    assert len(rows) == 4
+    base = [r for r in rows if r["scale"] == 0.0]
+    assert all(r["degradation"] == 1.0 for r in base)
+    assert all(not r["aborted"] for r in rows)
+    curve = degradation_curve(rows)
+    assert [p["scale"] for p in curve] == [0.0, 2.0]
+    assert curve[0]["mean"] == 1.0
+    assert curve[1]["mean"] >= 1.0
+    assert curve[1]["n"] == 2
+
+
+def test_straggler_policy_from_samples():
+    from repro.serve.engine import StragglerPolicy
+    pol = StragglerPolicy.from_samples([0.10, 0.11, 0.10, 0.12, 0.30],
+                                       percentile=1.0)
+    assert pol.expected_step_s == pytest.approx(0.11)
+    assert pol.factor == pytest.approx(0.30 / 0.11)
+    assert pol.observe(pol.expected_step_s * pol.factor * 1.01)
+    assert not pol.observe(pol.expected_step_s)
+    assert pol.slow_steps == 1
+    # tight distribution: the floor keeps scheduler noise from tripping it
+    tight = StragglerPolicy.from_samples([0.1] * 16)
+    assert tight.factor == 1.5
+    # no samples -> defaults, not a crash
+    assert StragglerPolicy.from_samples([]).expected_step_s == 0.1

@@ -1,0 +1,201 @@
+"""Crash-proof sweep harness (docs/robustness.md): per-point worker
+processes, kill-on-timeout, retry with exponential backoff, incremental
+atomic cache flush, corrupt-cache quarantine.
+
+Workers are injected via ``run_sweep(worker=...)`` and coordinate through
+marker files in a tmp dir (passed by env var so they survive any
+multiprocessing start method): ``try_<point>_<n>`` counts attempts, so the
+tests can assert *how many times* a point ran, not just that it finished.
+"""
+import json
+import os
+import time
+
+import pytest
+
+from repro.analysis.sweep import (
+    SweepError,
+    SweepPoint,
+    _cache_path,
+    knob_grid,
+    run_sweep,
+)
+from repro.configs.llama3 import AttnWorkload
+from repro.core.machine import H800
+from repro.utils.ioutil import atomic_write_json
+
+GRID = knob_grid(tma_bw=(1.0, 2.0))
+
+
+def _points(n=2):
+    return [SweepPoint(workload=AttnWorkload(name=f"w{i}", B=1, L=64, S=128,
+                                             H_kv=1, G=1, D=64),
+                       machine=H800)
+            for i in range(n)]
+
+
+# -- injected workers (module-level: picklable under any start method) ------
+
+def _mark(point, tag) -> int:
+    """Drop a marker file for this (tag, point) attempt; return how many
+    attempts happened *before* this one."""
+    d = os.environ["SWEEP_TEST_DIR"]
+    pre = f"{tag}_{point.workload.name}_"
+    n = len([f for f in os.listdir(d) if f.startswith(pre)])
+    with open(os.path.join(d, pre + str(n)), "w") as f:
+        f.write(str(os.getpid()))
+    return n
+
+
+def _marks(tmp_path, tag, point) -> int:
+    pre = f"{tag}_{point.workload.name}_"
+    return len([f for f in os.listdir(tmp_path) if f.startswith(pre)])
+
+
+def _ok_worker(args):
+    point, grid = args
+    _mark(point, "ok")
+    return [{"workload": point.workload.name, "knobs_label": k.label(),
+             "speedup": 1.0} for k in grid]
+
+
+def _crash_once_worker(args):
+    point, grid = args
+    if _mark(point, "try") == 0:
+        os._exit(3)          # simulated OOM kill: no exception, no rows
+    return _ok_worker(args)
+
+
+def _selective_crash_worker(args):
+    point, grid = args
+    if point.workload.name == "w1":
+        os._exit(9)
+    return _ok_worker(args)
+
+
+def _raise_once_worker(args):
+    point, grid = args
+    if _mark(point, "ser") == 0:
+        raise RuntimeError("flaky")
+    return _ok_worker(args)
+
+
+def _raise_worker(args):
+    raise RuntimeError("boom")
+
+
+def _hang_worker(args):
+    time.sleep(60)
+
+
+@pytest.fixture
+def sweep_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("SWEEP_TEST_DIR", str(tmp_path))
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+
+def test_crashed_worker_retried_with_backoff_and_recovers(sweep_dir):
+    """Every point's first worker dies with ``os._exit`` (the OOM-kill
+    shape: pipe EOF, no traceback); the retry must recover both points and
+    flush both cache files."""
+    cache = sweep_dir / "cache"
+    points = _points(2)
+    t0 = time.monotonic()
+    rows = run_sweep(points, GRID, processes=2, cache_dir=str(cache),
+                     retries=2, backoff_s=0.05, worker=_crash_once_worker)
+    elapsed = time.monotonic() - t0
+    assert len(rows) == len(points) * len(GRID)
+    for p in points:
+        assert _marks(sweep_dir, "try", p) == 2      # crash + successful retry
+        path = _cache_path(str(cache), p, GRID)
+        assert os.path.exists(path)
+        with open(path) as f:
+            payload = json.load(f)                   # flushed file is whole
+        assert len(payload["rows"]) == len(GRID)
+        assert "manifest" in payload
+    assert elapsed >= 0.05       # the backoff stamp was honored
+
+
+def test_completed_points_flushed_before_sweep_error(sweep_dir):
+    """One point failing permanently raises SweepError — but only after the
+    healthy point's rows hit the cache, so the re-run pays for one point."""
+    cache = sweep_dir / "cache"
+    points = _points(2)
+    with pytest.raises(SweepError, match="w1"):
+        run_sweep(points, GRID, processes=2, cache_dir=str(cache),
+                  retries=1, backoff_s=0.01, worker=_selective_crash_worker)
+    assert os.path.exists(_cache_path(str(cache), points[0], GRID))
+    assert not os.path.exists(_cache_path(str(cache), points[1], GRID))
+    # re-run with a healthy worker: w0 served from cache (no new attempt)
+    rows = run_sweep(points, GRID, processes=2, cache_dir=str(cache),
+                     worker=_ok_worker)
+    assert len(rows) == len(points) * len(GRID)
+    assert _marks(sweep_dir, "ok", points[0]) == 1   # cached, not recomputed
+    assert _marks(sweep_dir, "ok", points[1]) == 1   # computed in the re-run
+
+
+def test_corrupt_cache_quarantined_and_recomputed(sweep_dir):
+    cache = sweep_dir / "cache"
+    points = _points(2)
+    cache.mkdir()
+    bad = _cache_path(str(cache), points[0], GRID)
+    with open(bad, "w") as f:
+        f.write('{"manifest": {"git_sha": "x"}, "rows": [{"tr')   # torn write
+    rows = run_sweep(points, GRID, processes=1, cache_dir=str(cache),
+                     worker=_ok_worker)
+    assert len(rows) == len(points) * len(GRID)
+    assert os.path.exists(bad + ".corrupt")          # inspectable, not re-read
+    assert _marks(sweep_dir, "ok", points[0]) == 1   # recomputed once
+    # the rewritten cache is valid: a second sweep computes nothing
+    run_sweep(points, GRID, processes=1, cache_dir=str(cache),
+              worker=_ok_worker)
+    assert _marks(sweep_dir, "ok", points[0]) == 1
+    assert _marks(sweep_dir, "ok", points[1]) == 1
+
+
+def test_hung_worker_killed_at_timeout(sweep_dir):
+    t0 = time.monotonic()
+    with pytest.raises(SweepError, match="timed out"):
+        run_sweep(_points(1), GRID, processes=2, timeout_s=0.3, retries=1,
+                  backoff_s=0.05, worker=_hang_worker)
+    # 2 attempts x 0.3 s + backoff, not 60 s of sleep
+    assert time.monotonic() - t0 < 20
+
+
+def test_serial_mode_retries_exceptions(sweep_dir):
+    points = _points(1)
+    rows = run_sweep(points, GRID, processes=1, retries=1, backoff_s=0.01,
+                     worker=_raise_once_worker)
+    assert len(rows) == len(GRID)
+    assert _marks(sweep_dir, "ser", points[0]) == 2
+
+
+def test_serial_mode_permanent_failure_raises(sweep_dir):
+    with pytest.raises(SweepError, match="boom"):
+        run_sweep(_points(1), GRID, processes=1, retries=1, backoff_s=0.01,
+                  worker=_raise_worker)
+
+
+# ---------------------------------------------------------------------------
+# atomic artifact writes (repro.utils.ioutil)
+# ---------------------------------------------------------------------------
+
+def test_atomic_write_json_replaces_whole_file(tmp_path):
+    path = str(tmp_path / "artifact.json")
+    atomic_write_json(path, {"v": 1})
+    atomic_write_json(path, {"v": 2})
+    with open(path) as f:
+        assert json.load(f) == {"v": 2}
+    assert [p.name for p in tmp_path.iterdir()] == ["artifact.json"]
+
+
+def test_atomic_write_failure_leaves_old_artifact_intact(tmp_path):
+    path = str(tmp_path / "artifact.json")
+    atomic_write_json(path, {"v": 1})
+    with pytest.raises(TypeError):
+        atomic_write_json(path, {"v": {1, 2}})       # sets aren't JSON
+    with open(path) as f:
+        assert json.load(f) == {"v": 1}              # untouched
+    assert [p.name for p in tmp_path.iterdir()] == ["artifact.json"]
