@@ -1,0 +1,229 @@
+"""Tile-granular memory fidelity validation — the error-budget harness.
+
+``Engine(mem_fidelity="tile")`` collapses each TMA tile load into one bulk
+memory transaction (single completion event) instead of ``tile_lines``
+per-line cache requests.  That trade is only usable if its error stays
+*bounded and measured*, so this bench runs every registered kernel program
+plus fa3 tiling/machine variants in both modes and asserts, per cell:
+
+  * **byte-identical traffic** — ``dram_bytes``, ``tma_lines`` and L2
+    *misses* must match the line-exact run exactly (the refcounted
+    per-line residency model in ``TileMemory`` guarantees this even for
+    overlapping tile boxes);
+  * **bounded cycle error** — |tile - line| / line <= 5%;
+  * **bounded L2 request error** — <= 2.5% relative OR <= 512 lines
+    absolute.  Exactness is impossible here (line-exact merge windows
+    depend on sub-cycle interleaving; see docs/fidelity.md), and the
+    residual is a near-constant handful of mis-merged pair windows — a
+    large *percentage* only on tiny launches with tiny request counts.
+
+Cells run at full machine memory scale: that is tile fidelity's contract
+(simfa only selects it for full-machine launches; scaled-memory subset
+launches are the hierarchical tier's domain, see docs/fidelity.md).
+
+The full run also measures the reference full-fidelity FA3 launch in both
+modes (best-of-N wall) and gates tile speedup against a conservative
+floor; the measured numbers back the committed error table in
+docs/fidelity.md and the tile row family in BENCH_engine.json.
+
+    PYTHONPATH=src:. python benchmarks/bench_fidelity.py           # full
+    PYTHONPATH=src:. python benchmarks/bench_fidelity.py --smoke   # CI gate
+
+``--smoke`` runs the kernel-program cells plus a medium-workload speedup
+check with a lower floor (shared CI runners are noisy; the ~10x reference
+number is only meaningful on a quiet host) and writes nothing.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.engine import Engine
+from repro.core.kprog import registry
+from repro.core.machine import H800, h800_variant
+from repro.core.tracegen_fa3 import FA3Tiling, fa3_kernel_ctas
+
+from benchmarks.common import Sink, maybe_profile
+
+# error budget (acceptance bar; also asserted per-cell in
+# tests/test_engine_equiv.py on the kernel grid)
+CYCLE_ERR_MAX = 0.05        # |tile - line| / line cycles
+L2_REQ_ERR_MAX = 0.025      # l2_req_bytes, relative ...
+L2_REQ_ERR_MAX_LINES = 512  # ... or absolute (mis-merged pair windows)
+EXACT_KEYS = ("dram_bytes", "tma_lines")    # plus L2 misses, byte-identical
+
+# speedup floors on the tile-vs-line wall ratio.  The reference number is
+# ~10x on the full launch on a quiet host (BENCH_engine.json); CI runners
+# have multi-second contention phases, so the gates are deliberately loose
+# enough to only catch "the fast path stopped being fast" regressions.
+SPEEDUP_FLOOR_FULL = 5.0    # full reference launch, standalone runs
+SPEEDUP_FLOOR_SMOKE = 2.0   # medium launch, shared CI hosts
+
+# the reference full-fidelity FA3 launch (same as bench_engine "full")
+FULL_W = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+MEDIUM_W = dict(B=1, L=512, S=1024, H_kv=2, G=2, D=128)
+
+# kernel-program cells: every registered kernel, small enough to run both
+# modes in well under a second each (mirrors test_engine_equiv grid)
+KERNEL_CELLS = {
+    "fa3": (H800,
+            AttnWorkload(name="p", B=1, L=256, S=512, H_kv=1, G=2, D=128),
+            None),
+    "fa3_cooperative": (h800_variant(num_sms=4),
+                        AttnWorkload(name="c", B=1, L=256, S=512, H_kv=1,
+                                     G=2, D=128), None),
+    "fa2": (H800,
+            AttnWorkload(name="f", B=1, L=192, S=384, H_kv=1, G=1, D=64),
+            None),
+    "splitkv_decode": (H800,
+                       AttnWorkload(name="d", B=2, L=1, S=2048, H_kv=2,
+                                    G=4, D=128), None),
+}
+
+# fa3 tiling / machine variants: exercise non-default tile shapes, stage
+# counts, hash interleave, and a hard in-flight cap (full run only).
+# mem_fidelity="tile" refuses lrc_enabled=False outright (build_memory
+# raises): the no-LRC ablation is per-line request flooding by definition.
+VARIANT_CELLS = {
+    "fa3-t64x128s2": (H800,
+                      dict(B=1, L=128, S=256, H_kv=1, G=1, D=64),
+                      FA3Tiling(t_m=64, t_n=128, stages=2)),
+    "fa3-t64x96s3": (h800_variant(xor_hash=False, remote_copy=False),
+                     dict(B=1, L=192, S=384, H_kv=1, G=1, D=64),
+                     FA3Tiling(t_m=64, t_n=96, stages=3)),
+    "fa3-causal-cap8": (h800_variant(tma_max_inflight_lines=8),
+                        dict(B=1, L=256, S=512, H_kv=1, G=1, D=128,
+                             causal=True), None),
+}
+
+
+def _launch(cfg, ctas, tmaps, mem_fidelity):
+    eng = Engine(cfg, mem_fidelity=mem_fidelity)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    return eng.run()
+
+
+def _kernel_cell(name):
+    cfg, w, tiling = KERNEL_CELLS[name]
+    ctas, tmaps = registry.get(name).build(cfg, w, tiling=tiling)
+    return cfg, ctas, tmaps
+
+
+def _variant_cell(name):
+    cfg, kw, tiling = VARIANT_CELLS[name]
+    kw = dict(kw)
+    causal = kw.pop("causal", False)
+    ctas, tmaps = fa3_kernel_ctas(cfg, tiling=tiling or FA3Tiling(),
+                                  causal=causal, **kw)
+    return cfg, ctas, tmaps
+
+
+def check_cell(label, cfg, ctas, tmaps) -> dict:
+    """Run one grid cell line-exact and tile, assert the error budget."""
+    line = _launch(cfg, ctas, tmaps, "line")
+    tile = _launch(cfg, ctas, tmaps, "tile")
+    for key in EXACT_KEYS:
+        assert line[key] == tile[key], (
+            f"{label}: tile fidelity drifted on exact counter {key}: "
+            f"line {line[key]} != tile {tile[key]}")
+    assert line["l2"]["misses"] == tile["l2"]["misses"], (
+        f"{label}: L2 miss count drifted: "
+        f"{line['l2']['misses']} != {tile['l2']['misses']}")
+    cyc_err = abs(tile["cycles"] / line["cycles"] - 1.0)
+    l2_err = abs(tile["l2_req_bytes"] / line["l2_req_bytes"] - 1.0)
+    l2_err_lines = abs(tile["l2"]["requests"] - line["l2"]["requests"])
+    assert cyc_err <= CYCLE_ERR_MAX, (
+        f"{label}: tile cycle error {cyc_err:.2%} exceeds "
+        f"{CYCLE_ERR_MAX:.0%} bound ({tile['cycles']} vs {line['cycles']})")
+    assert l2_err <= L2_REQ_ERR_MAX or l2_err_lines <= L2_REQ_ERR_MAX_LINES, (
+        f"{label}: tile l2_req_bytes error {l2_err:.2%} "
+        f"({l2_err_lines} lines) exceeds the {L2_REQ_ERR_MAX:.1%}-or-"
+        f"{L2_REQ_ERR_MAX_LINES}-line bound")
+    return {
+        "cell": label,
+        "cycles_line": line["cycles"],
+        "cycles_tile": tile["cycles"],
+        "cycle_err_pct": round(100.0 * cyc_err, 3),
+        "l2_req_err_pct": round(100.0 * l2_err, 3),
+        "l2_req_err_lines": l2_err_lines,
+        "dram_bytes": line["dram_bytes"],
+        "tma_lines": line["tma_lines"],
+        "l2_misses": line["l2"]["misses"],
+        "traffic_exact": True,
+    }
+
+
+def _wall_pair(w_kw: dict, repeats: int = 3):
+    """Best-of-N wall seconds for the same launch in both fidelities."""
+    tiling = FA3Tiling()
+    total = (w_kw["B"] * w_kw["H_kv"] * w_kw["G"]
+             * math.ceil(w_kw["L"] / tiling.t_m))
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=tiling, max_ctas=total, **w_kw)
+    walls = {}
+    for mode in ("line", "tile"):
+        best = math.inf
+        for _ in range(repeats):
+            eng = Engine(H800, mem_fidelity=mode)
+            for tm in tmaps.values():
+                eng.define_tmap(tm)
+            t0 = time.perf_counter()
+            eng.launch(ctas)
+            eng.run()
+            best = min(best, time.perf_counter() - t0)
+        walls[mode] = best
+    return walls["line"], walls["tile"]
+
+
+def run(sink: Sink, smoke: bool = False, profile: bool = False):
+    cells = [(n, _kernel_cell) for n in KERNEL_CELLS]
+    if not smoke:
+        cells += [(n, _variant_cell) for n in VARIANT_CELLS]
+    max_cyc = max_l2 = 0.0
+    with maybe_profile(profile):
+        for label, builder in cells:
+            row = check_cell(label, *builder(label))
+            sink.row(**row)
+            max_cyc = max(max_cyc, row["cycle_err_pct"])
+            max_l2 = max(max_l2, row["l2_req_err_pct"])
+        # wall speedup: full reference launch standalone, medium in smoke
+        # (CI budget); floors are loose on purpose — see module docstring
+        w_kw, floor = ((MEDIUM_W, SPEEDUP_FLOOR_SMOKE) if smoke
+                       else (FULL_W, SPEEDUP_FLOOR_FULL))
+        line_s, tile_s = _wall_pair(w_kw)
+        speedup = line_s / tile_s
+        assert speedup >= floor, (
+            f"tile fidelity speedup collapsed: {speedup:.1f}x < {floor}x "
+            f"floor (line {line_s:.3f}s, tile {tile_s:.3f}s)")
+    sink.derive(
+        cells=len(cells),
+        max_cycle_err_pct=round(max_cyc, 3),
+        max_l2_req_err_pct=round(max_l2, 3),
+        wall_line_s=round(line_s, 4),
+        wall_tile_s=round(tile_s, 4),
+        speedup_tile_vs_line=round(speedup, 2),
+        speedup_workload="medium" if smoke else "full",
+    )
+    return sink.rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel cells + medium-launch speedup floor only; "
+                         "write nothing (CI gate)")
+    ap.add_argument("--profile", action="store_true")
+    args = ap.parse_args()
+
+    sink = Sink("fidelity")
+    run(sink, smoke=args.smoke, profile=args.profile)
+    if not args.smoke:
+        sink.finish()
+    print("fidelity " + ("smoke " if args.smoke else "") + "ok:",
+          sink.derived)
+    sys.exit(0)

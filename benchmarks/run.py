@@ -16,6 +16,7 @@ writes ``results/bench/<name>.json`` per bench.
 | Fig. 9 DRAM regimes vs GenZ        | traffic_dram     |
 | Table 5 ablations                  | ablations        |
 | (ours) Pallas kernels vs oracle    | kernels          |
+| (ours) tile-fidelity error budget  | fidelity         |
 | (ours) dry-run roofline terms      | roofline         |
 | (ours) variability degradation     | faults           |
 """
@@ -36,6 +37,7 @@ BENCHES = [
     "faults",
     "fa3_latency",
     "engine",
+    "fidelity",
     "traffic_l2",
     "traffic_dram",
     "tma_latency",
@@ -45,6 +47,7 @@ BENCHES = [
 
 FAST_SKIP = {"tma_bandwidth", "mshr", "tma_latency",   # slowest microbenches
              "engine",   # full-fidelity launch + broadcast-fallback rerun
+             "fidelity",  # full reference launch in both memory fidelities
              "faults"}   # 15-point Monte-Carlo sensitivity sweep
 
 

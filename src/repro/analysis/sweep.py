@@ -66,11 +66,14 @@ class SweepPoint:
     fidelity: str = "auto"
     n_sub: int = 8
     kernel: str = "fa3"         # registered kernel program name
+    mem_fidelity: Optional[str] = None  # engine memory model override
+                                        # (None = let fidelity decide)
 
 
 def _key(point: SweepPoint, grid: Sequence[Knobs]) -> str:
     blob = json.dumps([asdict(point.workload), asdict(point.machine),
                        point.fidelity, point.n_sub, point.kernel,
+                       point.mem_fidelity,
                        [asdict(k) for k in grid]], sort_keys=True)
     return hashlib.md5(blob.encode()).hexdigest()[:16]
 
@@ -83,9 +86,10 @@ def _sweep_one(args) -> List[Dict]:
     from repro.core.simfa import simulate_fa3
 
     t0 = time.perf_counter()
+    eopts = {"mem_fidelity": point.mem_fidelity} if point.mem_fidelity else None
     base = simulate_fa3(point.workload, point.machine, fidelity=point.fidelity,
                         n_sub=point.n_sub, record_events=True,
-                        kernel=point.kernel)
+                        kernel=point.kernel, engine_opts=eopts)
     sim_s = time.perf_counter() - t0
     dag = dag_mod.build(base.trace.events, base.trace.dispatch_parent)
     rows = []
@@ -98,6 +102,7 @@ def _sweep_one(args) -> List[Dict]:
             "machine": point.machine.name,
             "kernel": point.kernel,
             "fidelity": base.fidelity,
+            "mem_fidelity": base.mem_fidelity,
             "knobs": asdict(knobs),
             "knobs_label": knobs.label(),
             "base_cycles": base.cycles,
@@ -153,6 +158,8 @@ def _flush_point(cache_dir: str, point: SweepPoint, grid: Sequence[Knobs],
     manifest = build_manifest(
         machine=point.machine, workload=point.workload,
         kernel=point.kernel, fidelity=point.fidelity,
+        mem_fidelity=(rows[0].get("mem_fidelity") if rows
+                      else point.mem_fidelity),
         extra={"grid_points": len(grid)})
     atomic_write_json(_cache_path(cache_dir, point, grid),
                       {"manifest": manifest, "rows": rows})

@@ -42,7 +42,6 @@ from __future__ import annotations
 from bisect import insort
 from collections import deque
 from dataclasses import dataclass
-from heapq import heappop, heappush
 from operator import attrgetter
 from typing import Dict, List, Optional, Tuple
 
@@ -55,6 +54,11 @@ from repro.obs.labels import make_label
 READY, STALLED, DONE = 0, 1, 2
 
 _ORDER = attrgetter("order")    # GTO dispatch-order sort key
+
+# ops whose issue condition can fail (everything else issues unconditionally;
+# WGMMA — the hottest op — is special-cased ahead of the set probe)
+_BLOCKING = frozenset((isa.MB_WAIT, isa.ACQUIRE_STAGE, isa.WGMMA_WAIT,
+                       isa.TMA_WAIT, isa.BAR_WAIT))
 
 
 @dataclass
@@ -90,7 +94,7 @@ class WGThread:
     __slots__ = ("trace", "trace_len", "pc", "state", "cta", "wg_id", "sm",
                  "busy_until", "wgmma_groups", "tma_groups", "wgmma_out",
                  "tma_out", "mb_expected", "acq_count", "label", "parked",
-                 "order", "in_ready")
+                 "order", "in_ready", "mma_pending")
 
     def __init__(self, trace, cta, wg_id):
         self.trace = trace
@@ -108,6 +112,9 @@ class WGThread:
         # the drain waits test, so WGMMA_WAIT/TMA_WAIT checks are O(1)
         self.wgmma_out: set = set()
         self.tma_out: set = set()
+        # lazy-completion FIFO (event scheduler): (cycle, gid) per in-pipe
+        # WGMMA, applied to wgmma_groups on observation instead of per-event
+        self.mma_pending: deque = deque()
         self.mb_expected: Dict[int, int] = {}
         self.acq_count: Dict[int, int] = {}
         self.label = ""
@@ -161,18 +168,78 @@ class TensorCoreEngine:
         self.busy_until = 0
         self.busy_cycles = 0
         self.faults = sm.engine.faults
+        self._div = cfg.wgmma_n_cycles_divisor
+        self._dur_memo: Dict[int, int] = {}   # ins.n -> pipeline cycles
+        # Lazy completion mode (event scheduler, no sanitizer): a WGMMA's
+        # completion only mutates its own thread's group counters and can
+        # only wake that thread from its own WGMMA_WAIT, so instead of one
+        # EventQueue callback per WGMMA the completion is queued on
+        # th.mma_pending and folded in at the few sites that observe group
+        # state; a stalled drain wait gets ONE wake event at its exactly
+        # computable satisfaction cycle (the pipe is serial, so pending
+        # completion cycles are known at stall time).
+        self.lazy = (sm.engine.scheduler == "event"
+                     and sm.engine.sanitizer is None)
 
     def can_accept(self) -> bool:
         return len(self.buffer) < self.cfg.wgmma_issue_buffer
 
+    def _apply(self, th: WGThread, now: int):
+        """Fold every lazily queued completion at or before ``now`` into the
+        thread's group counters (the work _complete does eagerly)."""
+        pend = th.mma_pending
+        if not pend:
+            return
+        groups = th.wgmma_groups
+        out = th.wgmma_out
+        while pend and pend[0][0] <= now:
+            _, gid = pend.popleft()
+            g = groups[gid]
+            g[1] += 1
+            if g[2] and g[1] >= g[0]:
+                out.discard(gid)
+
     def push(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
-        g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
+        pend = th.mma_pending
+        if pend and pend[0][0] <= cycle:
+            self._apply(th, cycle)     # reuse check below reads g[1]
+        groups = th.wgmma_groups
+        g = groups.get(ins.gid)
+        if g is None:                  # .get avoids setdefault's list alloc
+            groups[ins.gid] = g = [0, 0, False]
         g[0] += 1
         if g[2] and g[1] == g[0] - 1:
             # a committed, fully drained group id got reused: outstanding again
             th.wgmma_out.add(ins.gid)
-        self.buffer.append((th, ins, nid))
-        self._pump(cycle)
+        if self.buffer:
+            self.buffer.append((th, ins, nid))
+            self._pump(cycle)
+            return
+        # fast path: the buffer is empty (the synchronous pop in _pump keeps
+        # it so), so this op heads straight into the pipe — same arithmetic
+        # as _pump without the deque round-trip, with the N->cycles mapping
+        # memoized (the divisor is frozen per machine config)
+        start = self.busy_until
+        if start < cycle:
+            start = cycle
+        dur = ins.cycles
+        if dur <= 0:
+            memo = self._dur_memo
+            dur = memo.get(ins.n)
+            if dur is None:
+                dur = max(1, int(round(ins.n / self._div)))
+                memo[ins.n] = dur
+        fl = self.faults
+        if fl is not None:
+            dur = fl.stretch(start, self.sm.sm_id, dur)
+        self.busy_until = start + dur
+        self.busy_cycles += dur
+        if self.sm.tracer is not None:
+            self.sm.tracer.on_mma(nid, th, ins, start, start + dur)
+        if self.lazy:
+            th.mma_pending.append((start + dur, ins.gid))
+        else:
+            self.evq.push(start + dur, self._complete, th, ins.gid)
 
     def _pump(self, cycle: int):
         if not self.buffer:
@@ -190,16 +257,61 @@ class TensorCoreEngine:
         self.busy_cycles += dur
         if self.sm.tracer is not None:
             self.sm.tracer.on_mma(nid, th, ins, start, start + dur)
-        self.evq.push(start + dur, self._complete, th, ins.gid)
+        if self.lazy:
+            th.mma_pending.append((start + dur, ins.gid))
+        else:
+            self.evq.push(start + dur, self._complete, th, ins.gid)
+
+    def drain_wake_cycle(self, th: WGThread, ins: Instr) -> Optional[int]:
+        """Cycle at which ``th``'s WGMMA_WAIT drain condition flips true.
+
+        The TC pipe is strictly serial, so the pending completions' cycles
+        and group ids are already determined; walk them in order, retiring
+        outstanding groups <= ins.gid, until enough have drained.  Returns
+        None if pending completions cannot satisfy the wait (then no
+        eager completion event would have woken the thread either)."""
+        gid = ins.gid
+        groups = th.wgmma_groups
+        rem: Dict[int, int] = {}
+        for g_ in th.wgmma_out:
+            if g_ <= gid:
+                g = groups[g_]
+                rem[g_] = g[0] - g[1]
+        need = len(rem) - ins.n
+        if need <= 0:
+            return None
+        for t, g_ in th.mma_pending:
+            r = rem.get(g_)
+            if r is not None:
+                r -= 1
+                rem[g_] = r
+                if r == 0:
+                    need -= 1
+                    if need == 0:
+                        return t
+        return None
+
+    def _drain_wake(self, th: WGThread):
+        """Scheduled wake for a lazily tracked WGMMA_WAIT stall."""
+        self._apply(th, self.sm.engine.cycle)
+        self.sm.notify_group(th)
 
     def _complete(self, th: WGThread, gid: int):
         g = th.wgmma_groups[gid]
         g[1] += 1
         if g[2] and g[1] >= g[0]:
             th.wgmma_out.discard(gid)
-        self.sm.notify_group(th)
-        self._pump(self.busy_until)
-        self.sm.notify_tc()
+        # inlined notify_group guard: the issuing thread is usually still
+        # running (not stalled on its own drain), so skip the call entirely
+        sm = self.sm
+        if sm.broadcast:
+            sm.wake_all()
+        elif th.state == STALLED and not th.parked:
+            sm.notify_group(th)
+        if self.buffer:
+            self._pump(self.busy_until)
+        if self.waiters:
+            sm.notify_tc()
 
 
 class TMAEngine:
@@ -219,6 +331,9 @@ class TMAEngine:
         self.lrc = lrc
         self.tmaps = tmaps
         self.faults = sm.engine.faults
+        # tile fidelity: the front end is a TileMemory and whole tiles are
+        # charged as single bulk transactions (no per-line issue machinery)
+        self._tile_mem = lrc if sm.engine.mem_fidelity == "tile" else None
         # frozen-config hot constants, hoisted off the issue path
         self._lpc = cfg.tma_lines_per_cycle
         self._cap = cfg.tma_max_inflight_lines
@@ -258,6 +373,9 @@ class TMAEngine:
         fl = self.faults
         if fl is not None:
             setup += fl.tma_extra()
+        if self._tile_mem is not None:
+            self._submit_tile(cycle, th, ins, nid, False, setup, lines)
+            return
         job = {"lines": deque(lines), "left": len(lines), "th": th,
                "sid": ins.sid, "write": False, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
@@ -277,11 +395,42 @@ class TMAEngine:
         fl = self.faults
         if fl is not None:
             setup += fl.tma_extra()
+        if self._tile_mem is not None:
+            self._submit_tile(cycle, th, ins, nid, True, setup, lines)
+            return
         job = {"lines": deque(lines), "left": len(lines), "th": th,
                "gid": ins.gid, "write": True, "tag": ins.tag, "t0": cycle,
                "inflight": 0, "nid": nid, "setup": setup}
         job["done"] = self._make_done(job)
         self.evq.push(cycle + setup, self._start, job)
+
+    # -- tile fidelity: one bulk transaction + one completion event per job
+    def _submit_tile(self, cycle: int, th: WGThread, ins: Instr, nid: int,
+                     write: bool, setup: int, lines):
+        job = {"lines": (), "left": 0, "th": th, "write": write,
+               "tag": ins.tag, "t0": cycle, "inflight": len(lines),
+               "nid": nid, "setup": setup}
+        if write:
+            job["gid"] = ins.gid
+        else:
+            job["sid"] = ins.sid
+        self.lines_issued += len(lines)
+        self.evq.push(cycle + setup, self._start_tile, job, lines)
+
+    def _start_tile(self, job, lines):
+        self.jobs.append(job)    # live while in flight: counter sink samples
+        t = self._tile_mem.transact(self.eng.cycle, lines, self.sm.sm_id,
+                                    job["write"])
+        fl = self.eng.faults
+        if fl is not None:
+            d = fl.finish_delay()
+            if d:
+                t += d
+        self.evq.push(t, self._retire_tile, job)
+
+    def _retire_tile(self, job):
+        job["inflight"] = 0
+        self._finish(job)
 
     def _make_done(self, job):
         """One shared completion callback per job — the LRC invokes it once
@@ -460,6 +609,9 @@ class SM:
         self.tma = TMAEngine(cfg, self.evq, self, engine.lrc, engine.tmaps)
         self.current: Optional[WGThread] = None   # GTO greedy pointer
         self.issue_cycles = 0
+        # hot-loop constants (step() runs once per issuing SM per cycle)
+        self._iw = cfg.issue_width
+        self._tc_cap = cfg.wgmma_issue_buffer
 
     # ------------------------------------------------------------------
     def threads(self):
@@ -490,8 +642,12 @@ class SM:
     # ------------------------------------------------------------------
     # condition checks for blocking instructions
     def _cond_met(self, th: WGThread, ins: Instr) -> bool:
-        cta = th.cta
         op = ins.op
+        if op == isa.WGMMA:             # hottest op: checked first
+            return self.tc.can_accept()
+        if op not in _BLOCKING:         # non-blocking ops: one set probe
+            return True
+        cta = th.cta
         if op == isa.MB_WAIT:
             need = th.mb_expected.get(ins.sid, 0) + 1
             return cta.mbarrier.get(ins.sid, 0) >= need
@@ -501,6 +657,9 @@ class SM:
                 return True
             return cta.stage_releases.get(ins.sid, 0) >= use * cta.n_consumers
         if op == isa.WGMMA_WAIT:
+            pend = th.mma_pending
+            if pend and pend[0][0] <= self.engine.cycle:
+                self.tc._apply(th, self.engine.cycle)
             out = th.wgmma_out
             if len(out) <= ins.n:       # O(1) fast path: total outstanding
                 return True
@@ -512,17 +671,8 @@ class SM:
                 return True
             gid = ins.gid
             return sum(1 for g in out if g <= gid) <= ins.n
-        if op == isa.BAR_WAIT:
-            return cta.bar_arrivals.get(ins.bid, 0) >= ins.n
-        if op == isa.WGMMA:
-            return self.tc.can_accept()
-        return True
-
-    def _apply_blocking(self, th: WGThread, ins: Instr):
-        if ins.op == isa.MB_WAIT:
-            th.mb_expected[ins.sid] = th.mb_expected.get(ins.sid, 0) + 1
-        elif ins.op == isa.ACQUIRE_STAGE:
-            th.acq_count[ins.sid] = th.acq_count.get(ins.sid, 0) + 1
+        # BAR_WAIT (the only remaining member of _BLOCKING)
+        return cta.bar_arrivals.get(ins.bid, 0) >= ins.n
 
     # ------------------------------------------------------------------
     # waiter index: park / targeted wake (waiter-mode scheduler)
@@ -542,7 +692,14 @@ class SM:
         elif op == isa.WGMMA:
             self.tc.waiters.append(th)
         else:                       # WGMMA_WAIT / TMA_WAIT: probed via
-            return                  # notify_group, not list-parked
+            # notify_group, not list-parked.  Under lazy completions a
+            # WGMMA_WAIT gets its one wake event at the computed drain cycle
+            # (TMA_WAIT drains stay eventful via TMAEngine._finish).
+            if op == isa.WGMMA_WAIT and self.tc.lazy:
+                t = self.tc.drain_wake_cycle(th, ins)
+                if t is not None:
+                    self.evq.push(t, self.tc._drain_wake, th)
+            return
         th.parked = True
 
     def _drain_waiters(self, lst: List[WGThread]):
@@ -583,19 +740,37 @@ class SM:
 
     def notify_group(self, th: WGThread):
         """One of ``th``'s WGMMA/TMA groups completed work: re-check a
-        pending drain wait.  ``parked`` threads wait on something else."""
+        pending drain wait.  ``parked`` threads wait on something else.
+        The drain condition is inlined (it fires once per async completion
+        with the waiter usually stalled on exactly this drain)."""
         if self.broadcast:
             self.wake_all()
             return
         if th.state == STALLED and not th.parked:
             ins = th.trace[th.pc]
-            if (ins.op == isa.WGMMA_WAIT or ins.op == isa.TMA_WAIT) \
-                    and self._cond_met(th, ins):
-                th.state = READY
-                if self.event:
-                    th.in_ready = True
-                    insort(self._ready, th, key=_ORDER)
-                self.engine.mark_active(self)
+            op = ins.op
+            if op == isa.WGMMA_WAIT:
+                pend = th.mma_pending
+                if pend and pend[0][0] <= self.engine.cycle:
+                    self.tc._apply(th, self.engine.cycle)
+                out = th.wgmma_out
+            elif op == isa.TMA_WAIT:
+                out = th.tma_out
+            else:
+                return
+            if len(out) > ins.n:
+                gid = ins.gid
+                c = 0
+                for g in out:
+                    if g <= gid:
+                        c += 1
+                if c > ins.n:
+                    return
+            th.state = READY
+            if self.event:
+                th.in_ready = True
+                insort(self._ready, th, key=_ORDER)
+            self.engine.mark_active(self)
 
     def notify_tc(self):
         if not self.broadcast and self.tc.waiters:
@@ -607,28 +782,121 @@ class SM:
         progressed = False
         broadcast = self.broadcast
         event = self.event
-        for _ in range(self.cfg.issue_width):
+        # hot-loop locals: step runs once per issuing SM per cycle, so every
+        # attribute fetch hoisted here is ~50k fewer lookups per launch
+        tc = self.tc
+        tc_buf = tc.buffer
+        tc_cap = self._tc_cap
+        tracer = self.tracer
+        fast_wgmma = self.san is None
+        tc_lazy = tc.lazy
+        ready = self._ready
+        wgmma = isa.WGMMA
+        blocking = _BLOCKING
+        for _ in range(self._iw):
             issued = False
-            cands = (self._candidates_event() if event
-                     else self._candidates(cycle))
+            if event:
+                # inline of _candidates_event: greedy current thread first,
+                # then the maintained ready queue in dispatch order.  Eager
+                # snapshot is safe — a candidate's stall processing only
+                # removes *itself* from the queue, and an issue breaks out
+                # of the scan immediately.  With one ready thread the queue
+                # itself is the snapshot (a stall empties it, ending the
+                # scan; an issue breaks out before any further iteration).
+                cur = self.current
+                if len(ready) == 1:
+                    cands = ready
+                elif cur is not None and cur.in_ready:
+                    cands = [cur]
+                    for t in ready:
+                        if t is not cur:
+                            cands.append(t)
+                else:
+                    cands = list(ready)
+            else:
+                cands = self._candidates(cycle)
             for th in cands:
                 ins = th.trace[th.pc]
-                if not self._cond_met(th, ins):
+                # inline of _cond_met's two hottest outcomes (WGMMA issue
+                # and non-blocking ops); the blocking waits take the call
+                op = ins.op
+                if op == wgmma:
+                    if len(tc_buf) < tc_cap:
+                        # direct dispatch of the hottest op (skips
+                        # _execute's chain; WGMMA has no blocking-side
+                        # bookkeeping).  Sanitizer runs keep _execute.
+                        nid = (tracer.on_issue(cycle, th, ins)
+                               if tracer is not None else -1)
+                        if tc_lazy and not tc_buf:
+                            # inline of TensorCoreEngine.push's fast path
+                            # (same arithmetic, minus the two call frames)
+                            pend = th.mma_pending
+                            if pend and pend[0][0] <= cycle:
+                                tc._apply(th, cycle)
+                            gid = ins.gid
+                            groups = th.wgmma_groups
+                            g = groups.get(gid)
+                            if g is None:
+                                groups[gid] = g = [0, 0, False]
+                            g[0] += 1
+                            if g[2] and g[1] == g[0] - 1:
+                                th.wgmma_out.add(gid)
+                            start = tc.busy_until
+                            if start < cycle:
+                                start = cycle
+                            dur = ins.cycles
+                            if dur <= 0:
+                                memo = tc._dur_memo
+                                dur = memo.get(ins.n)
+                                if dur is None:
+                                    dur = max(1, int(round(ins.n / tc._div)))
+                                    memo[ins.n] = dur
+                            fl = tc.faults
+                            if fl is not None:
+                                dur = fl.stretch(start, self.sm_id, dur)
+                            end = start + dur
+                            tc.busy_until = end
+                            tc.busy_cycles += dur
+                            if tracer is not None:
+                                tracer.on_mma(nid, th, ins, start, end)
+                            th.mma_pending.append((end, gid))
+                        elif fast_wgmma:
+                            tc.push(cycle, th, ins, nid)
+                        else:
+                            self._execute(cycle, th, ins, nid)
+                        th.pc += 1
+                    else:
+                        th.state = STALLED
+                        if not broadcast:
+                            self._park(th, ins)
+                        if event and th.in_ready:
+                            th.in_ready = False
+                            ready.remove(th)
+                        if self.current is th:
+                            self.current = None
+                        continue
+                elif op in blocking and not self._cond_met(th, ins):
                     th.state = STALLED   # PC rollback: do not advance
                     if not broadcast:
                         self._park(th, ins)
                     if event and th.in_ready:
                         th.in_ready = False
-                        self._ready.remove(th)
+                        ready.remove(th)
                     if self.current is th:
                         self.current = None
                     continue             # GTO: fall through to next-oldest
-                # trace before counters mutate: dep ordinals snapshot here
-                nid = (self.tracer.on_issue(cycle, th, ins)
-                       if self.tracer is not None else -1)
-                self._apply_blocking(th, ins)
-                self._execute(cycle, th, ins, nid)
-                th.pc += 1
+                else:
+                    # trace before counters mutate: dep ordinals snapshot
+                    nid = (tracer.on_issue(cycle, th, ins)
+                           if tracer is not None else -1)
+                    if op == isa.MB_WAIT:
+                        th.mb_expected[ins.sid] = \
+                            th.mb_expected.get(ins.sid, 0) + 1
+                    elif op == isa.ACQUIRE_STAGE:
+                        th.acq_count[ins.sid] = \
+                            th.acq_count.get(ins.sid, 0) + 1
+                    self._execute(cycle, th, ins, nid)
+                    th.pc += 1
                 self.current = th        # greedy: keep issuing this thread
                 issued = True
                 if th.pc >= th.trace_len:
@@ -662,31 +930,20 @@ class SM:
                     and th.busy_until <= cycle):
                 yield th
 
-    def _candidates_event(self):
-        """Event-mode candidates: the maintained ready queue is already
-        filtered (READY, non-busy, non-done) and in dispatch order, so this
-        only has to overlay the GTO greedy-current priority.  The snapshot
-        is safe: within one issue, the only queue mutation before ``break``
-        is the removal of the thread currently being examined."""
-        cur = self.current
-        if cur is not None and cur.in_ready:
-            yield cur
-        for th in tuple(self._ready):
-            if th is not cur and th.in_ready:
-                yield th
-
     def _execute(self, cycle: int, th: WGThread, ins: Instr, nid: int = -1):
         if self.san is not None:
             self.san.on_execute(cycle, th, ins)
         op = ins.op
         cta = th.cta
-        if op == isa.TMA_TENSOR:
+        if op == isa.WGMMA:             # hottest op: dispatched first
+            self.tc.push(cycle, th, ins, nid)
+        elif op == isa.TMA_TENSOR:
             self.tma.submit_load(cycle, th, ins, nid)
         elif op == isa.TMA_STORE:
             self.tma.submit_store(cycle, th, ins, nid)
-        elif op == isa.WGMMA:
-            self.tc.push(cycle, th, ins, nid)
         elif op == isa.WGMMA_COMMIT:
+            if th.mma_pending:
+                self.tc._apply(th, cycle)
             g = th.wgmma_groups.setdefault(ins.gid, [0, 0, False])
             if not g[2]:
                 g[2] = True
@@ -755,6 +1012,7 @@ class Engine:
     """Top level: CTA dispatcher + global cycle loop (Algorithm 1)."""
 
     SCHEDULERS = ("event", "waiter", "broadcast")
+    MEM_FIDELITIES = ("line", "tile")
 
     def __init__(self, machine: GPUMachine, n_sms: Optional[int] = None,
                  mem_scale: Optional[float] = None, record_gantt: bool = False,
@@ -762,7 +1020,8 @@ class Engine:
                  broadcast_wake: bool = False,
                  scheduler: Optional[str] = None,
                  counters=None, sanitize: bool = False,
-                 faults=None, watchdog=None):
+                 faults=None, watchdog=None,
+                 mem_fidelity: str = "line"):
         if scheduler is None:
             scheduler = "broadcast" if broadcast_wake else "event"
         elif scheduler not in self.SCHEDULERS:
@@ -771,13 +1030,18 @@ class Engine:
         elif broadcast_wake and scheduler != "broadcast":
             raise ValueError("broadcast_wake=True conflicts with "
                              f"scheduler={scheduler!r}")
+        if mem_fidelity not in self.MEM_FIDELITIES:
+            raise ValueError(f"unknown mem_fidelity {mem_fidelity!r}; "
+                             f"expected one of {self.MEM_FIDELITIES}")
         self.scheduler = scheduler
+        self.mem_fidelity = mem_fidelity
         self.cfg = machine
         self.n_sms = n_sms or machine.num_sms
         scale = mem_scale if mem_scale is not None else self.n_sms / machine.num_sms
         self.evq = EventQueue()
         self.lrc, self.l2, self.dram = build_memory(machine, self.evq, scale,
-                                                    seed, direct=direct_hbm)
+                                                    seed, direct=direct_hbm,
+                                                    tile=mem_fidelity == "tile")
         self.tmaps: Dict[int, TensorMap] = {}
         self.tile_cache: Dict[tuple, list] = {}   # (map_id, origin) -> lines
         self.tile_seen: set = set()               # keys seen exactly once
@@ -841,10 +1105,11 @@ class Engine:
         self.deadlocked = False
         self._active = set(range(self.n_sms))
         # event mode: the active set is a maintained ordered structure —
-        # a min-heap of sm ids plus a membership flag per SM (no duplicate
-        # entries), so the run loop drains it in ascending-id order instead
-        # of re-sorting a set every iteration
-        self._active_heap: List[int] = list(range(self.n_sms))
+        # sorted list of active sm ids plus a membership flag per SM: the
+        # run loop sweeps a tuple snapshot in ascending-id order, and in
+        # steady state (every swept SM still issue-eligible) pays zero
+        # maintenance — wakes insort (rare), removals trigger one rebuild
+        self._active_list: List[int] = list(range(self.n_sms))
         self._active_flags = bytearray([1]) * self.n_sms
 
     # ------------------------------------------------------------------
@@ -890,7 +1155,7 @@ class Engine:
             sid = sm.sm_id
             if not self._active_flags[sid]:
                 self._active_flags[sid] = 1
-                heappush(self._active_heap, sid)
+                insort(self._active_list, sid)
             return
         self._active.add(sm.sm_id)
         if self.broadcast_wake:
@@ -968,12 +1233,14 @@ class Engine:
         woken mid-sweep first issues on the following cycle."""
         sms = self.sms
         evq = self.evq
-        heap = self._active_heap
+        evh = evq._h     # heap head probed inline: most cycles drain nothing
+        lst = self._active_list
         flags = self._active_flags
         snk = self.counters
         wd = self.watchdog
         while self.cycle < max_cycles:
-            evq.pop_ready(self.cycle)
+            if evh and evh[0] <= self.cycle:
+                evq.pop_ready(self.cycle)
             if snk is not None and self.cycle >= snk.next_sample:
                 snk.sample(self.cycle, self)
             if self.retired == self.launched and not self.pending:
@@ -982,21 +1249,34 @@ class Engine:
                 self._abort(wd)
                 break
             progressed = False
-            if heap:
-                snapshot = []
-                while heap:                 # ascending sm id
-                    sid = heappop(heap)
-                    flags[sid] = 0
-                    snapshot.append(sid)
+            if lst:
+                # snapshot discipline: only SMs active at cycle start are
+                # swept (ascending sm id); mid-sweep wakes insort into lst
+                # and issue next cycle.  A removal transiently leaves its
+                # stale entry in lst (flag 0), so a re-wake within the same
+                # sweep can duplicate it — the rebuild below dedups.
+                snapshot = tuple(lst)
+                removed = False
                 for sid in snapshot:
                     sm = sms[sid]
                     if sm._ready:
                         if sm.step(self.cycle):
                             progressed = True
                             sm.issue_cycles += 1
-                        if sm._ready and not flags[sid]:
-                            flags[sid] = 1
-                            heappush(heap, sid)
+                        if not sm._ready:
+                            flags[sid] = 0
+                            removed = True
+                    else:
+                        flags[sid] = 0
+                        removed = True
+                if removed:
+                    seen = set()
+                    keep = []
+                    for sid in lst:
+                        if flags[sid] and sid not in seen:
+                            seen.add(sid)
+                            keep.append(sid)
+                    lst[:] = keep
             if progressed:
                 self.cycle += 1
                 continue

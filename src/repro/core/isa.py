@@ -54,29 +54,55 @@ class TensorMap:
         containing line (ablation: 'No line deduplication', paper Table 5)."""
         # innermost dim assumed contiguous (stride == esz)
         inner = self.box[-1] * self.esz
-        lines = []
-        seen = set()
-
-        def rec(dim, addr):
-            if dim == len(self.box) - 1:
-                if dedup:
-                    start = addr
+        lines: list = []
+        # fold the outer dims into a flat row-major list of row base
+        # addresses (outer index varies slowest — same depth-first order
+        # as the recursive formulation this replaces)
+        addrs = [self.base + origin[-1] * self.esz]
+        for dim in range(len(self.box) - 1):
+            o = origin[dim]
+            s = self.strides[dim]
+            addrs = [a + (o + i) * s
+                     for a in addrs for i in range(self.box[dim])]
+        if dedup:
+            seen: set = set()
+            add = seen.add
+            ap = lines.append
+            if inner % line_bytes == 0 and self.base % line_bytes == 0:
+                # aligned rows: each row is exactly inner//line_bytes whole
+                # lines starting at the row address (no per-line rounding)
+                nl = inner // line_bytes
+                for addr in addrs:
+                    if addr % line_bytes:
+                        a = addr - addr % line_bytes
+                        end = addr + inner
+                        while a < end:
+                            if a not in seen:
+                                add(a)
+                                ap(a)
+                            a += line_bytes
+                    else:
+                        for k in range(nl):
+                            a = addr + k * line_bytes
+                            if a not in seen:
+                                add(a)
+                                ap(a)
+            else:
+                for addr in addrs:
                     end = addr + inner
-                    a = (start // line_bytes) * line_bytes
+                    a = addr - addr % line_bytes
                     while a < end:
                         if a not in seen:
-                            seen.add(a)
-                            lines.append(a)
+                            add(a)
+                            ap(a)
                         a += line_bytes
-                else:
-                    for e in range(self.box[-1]):
-                        a = addr + e * self.esz
-                        lines.append((a // line_bytes) * line_bytes)
-                return
-            for i in range(self.box[dim]):
-                rec(dim + 1, addr + (origin[dim] + i) * self.strides[dim])
-
-        rec(0, self.base + origin[-1] * self.esz)
+        else:
+            esz = self.esz
+            ap = lines.append
+            for addr in addrs:
+                for e in range(self.box[-1]):
+                    a = addr + e * esz
+                    ap(a - a % line_bytes)
         return lines
 
 

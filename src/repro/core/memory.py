@@ -494,11 +494,332 @@ class DirectHBM:
                 "mshr_merges": 0, "rc_inserts": 0, "mshr_peak": 0}
 
 
+class TileMemory:
+    """Tile-granular memory front end (``Engine(mem_fidelity="tile")``).
+
+    Collapses a TMA tile's ``tile_lines`` per-line cache events into ONE
+    bulk transaction: residency, slice-partition distribution, merge
+    windows and DRAM channel occupancy are charged at tile granularity and
+    the whole tile completes with a single EventQueue callback, instead of
+    per-line LRC/MSHR/refill bookkeeping (docs/fidelity.md).
+
+    Byte-exact vs. the line-exact hierarchy (asserted by
+    ``tests/test_engine_equiv.py`` and ``benchmarks/bench_fidelity.py``):
+    ``dram_bytes``, ``tma_lines``, and L2 ``misses`` — these are structural
+    (the set of first-touched lines), not timing-dependent.  Approximated:
+    request/merge *split* (line-exact merge windows depend on sub-cycle
+    event interleaving — see docs/fidelity.md for why byte-identical
+    post-coalescer traffic is unattainable at tile granularity) and all
+    latencies, which come from a streaming service model (issue rate +
+    in-flight cap + blended near/far latency) over the same machine
+    constants, validated to the documented cycle-error bound.
+
+    State is O(tiles): a tile-granular LRU with per-tile slice-partition
+    counts, lazily-expired fill/merge windows (no cleanup events), and the
+    shared per-channel DRAM ``free_at`` model charged in bulk.
+    """
+
+    def __init__(self, cfg: GPUMachine, dram: DRAM, evq: EventQueue,
+                 scale: float = 1.0, seed: int = 0):
+        self.cfg = cfg
+        self.dram = dram
+        self.evq = evq
+        self.rng = random.Random(seed)   # RC mirror draws (tile-granular)
+        n = max(2, int(round(cfg.l2_slices * scale)))
+        self._nsl = n
+        self._half_slice = n // 2
+        self.capacity = max(16, int(cfg.l2_bytes * scale) // cfg.line_bytes)
+        # tile key -> [distinct_line_list, part0_lines, part1_lines, m0, m1]
+        # (m0/m1: RemoteCopy mirror present for requesters in partition 0/1)
+        self.tiles: "OrderedDict[tuple, list]" = OrderedDict()
+        # line -> number of resident tiles containing it.  Tiles of different
+        # tensor maps can OVERLAP (unclamped boxes spill across region
+        # boundaries), so misses/dram_bytes must be counted per line, not
+        # per tile — this is what keeps them byte-identical to line-exact.
+        self.line_ref: Dict[int, int] = {}
+        self.mirror_lines = 0           # RC mirror capacity pressure
+        self.fill_done: Dict[tuple, Tuple[int, int]] = {}  # key -> (t, lines)
+        # (pair, key) -> merge window (issue start, stream end)
+        self.pending: Dict[tuple, Tuple[int, int]] = {}
+        # per-SM TMA port: aggregate issue-slot occupancy (lines_per_cycle)
+        self.port_free: Dict[int, int] = {}
+        # stats: same schema as L2Cache.stats() + LRC.merged, all in lines
+        self.hits = 0
+        self.misses = 0
+        self.mshr_merges = 0
+        self.rc_inserts = 0
+        self.mshr_peak = 0
+        self.requests = 0
+        self.merged = 0
+        self.faults = None              # repro.faults.FaultSession hook
+        # hot machine constants
+        self._lb = cfg.line_bytes
+        self._xor = cfg.xor_hash
+        self._lpc = cfg.tma_lines_per_cycle
+        self._cap = cfg.tma_max_inflight_lines
+        self._near = cfg.l2_near_latency
+        self._far = cfg.l2_far_latency
+        self._dram_lat = cfg.dram_latency
+        self._half_sms = cfg.num_sms // 2
+        self._lrc_on = cfg.lrc_enabled
+        self._dedup = cfg.tma_dedup
+        self._rc = cfg.remote_copy
+        self._rc_thresh = cfg.rc_occupancy_threshold
+        self._rc_prob = cfg.rc_max_prob
+
+    # ------------------------------------------------------------------
+    def _stream(self, base: int, n: int, lam: int) -> int:
+        """Completion cycle of an n-line stream starting at ``base``: issue
+        at ``tma_lines_per_cycle``, at most ``tma_max_inflight_lines``
+        outstanding at per-line latency ``lam`` (Little's-law throughput
+        when the cap binds), plus the last line's latency."""
+        tail = (n - 1) // self._lpc
+        c = self._cap
+        if n > c:
+            alt = (n - c) * lam // c
+            if alt > tail:
+                tail = alt
+        return base + tail + lam
+
+    def _part_counts(self, lines) -> Tuple[int, int]:
+        """Count distinct lines homed in each L2 partition (XOR slice hash,
+        slices [0, n/2) = partition 0) — computed once per resident tile."""
+        n = self._nsl
+        half = self._half_slice
+        lb = self._lb
+        p0 = 0
+        if self._xor:
+            for la in lines:
+                ln = la // lb
+                if (ln ^ (ln >> 5)) % n < half:
+                    p0 += 1
+        else:
+            for la in lines:
+                if (la // lb) % n < half:
+                    p0 += 1
+        return p0, len(lines) - p0
+
+    @property
+    def resident_lines(self) -> int:
+        return len(self.line_ref) + self.mirror_lines
+
+    def _evict(self, cycle: int):
+        tiles = self.tiles
+        fd = self.fill_done
+        ref = self.line_ref
+        cap = self.capacity
+        scanned = 0
+        while len(ref) + self.mirror_lines > cap and scanned < len(tiles):
+            key = next(iter(tiles))
+            w = fd.get(key)
+            if w is not None and w[0] > cycle:
+                # still filling: its lines are MSHR-held in line-exact mode,
+                # so eviction can't reach them — skip (keeps dram_bytes exact)
+                tiles.move_to_end(key)
+                scanned += 1
+                continue
+            ent = tiles.pop(key)
+            fd.pop(key, None)
+            for la in ent[0]:
+                c = ref[la]
+                if c == 1:
+                    del ref[la]
+                else:
+                    ref[la] = c - 1
+            if ent[3]:
+                self.mirror_lines -= ent[2]
+            if ent[4]:
+                self.mirror_lines -= ent[1]
+
+    # ------------------------------------------------------------------
+    def transact(self, cycle: int, lines, sm_id: int, write: bool) -> int:
+        """Charge one TMA tile as a single bulk transaction; returns the
+        cycle the whole tile completes (always > ``cycle``)."""
+        n = len(lines)
+        key = (lines[0], lines[-1], n)
+        fl = self.faults
+        port = self.port_free
+        base = port.get(sm_id, 0)
+        if base < cycle:
+            base = cycle
+        # the tile consumes n issue slots of this SM's TMA port (the
+        # work-conserving view of the per-cycle line budget)
+        port[sm_id] = base + (n + self._lpc - 1) // self._lpc
+
+        # Coalescer merge window: a pair-mate streaming the same tile while
+        # the original's stream is still in flight merges whole.  Line-exact
+        # merging is per *line* (only lines still pending merge; the rest
+        # re-request as hits), but both streams issue at the same per-cycle
+        # rate, so merged completions track the original's and the race
+        # offset stays constant — whole-window all-merge is the closest
+        # tile-granular analogue.  The residual split error is measured per
+        # cell by benchmarks/bench_fidelity.py and documented in
+        # docs/fidelity.md (largest on tiny launches, where a handful of
+        # mis-merged tiles is a big fraction of a small request count).
+        if self._lrc_on and not write:
+            pkey = (sm_id // 2, key)
+            prev = self.pending.get(pkey)
+            if prev is not None and prev[1] > cycle:
+                self.merged += n
+                t = self._stream(base, n, 0)
+                if t < prev[1]:
+                    t = prev[1]
+                return t
+        else:
+            pkey = None
+
+        nd = n if self._dedup else len(set(lines))
+        if self._lrc_on and not write:
+            self.requests += nd
+            self.merged += n - nd       # intra-tile duplicates coalesce
+        else:
+            self.requests += n
+        part = 0 if sm_id < self._half_sms else 1
+
+        ent = self.tiles.get(key)
+        filling = None
+        if ent is not None:
+            w = self.fill_done.get(key)
+            if w is not None:
+                if w[0] > cycle:
+                    filling = w[0]
+                else:
+                    del self.fill_done[key]
+        if ent is None:
+            # first touch (or re-touch after eviction): every line not
+            # already resident via an overlapping tile misses — bulk-charge
+            # the DRAM channels line by line (channel interleave + queueing
+            # preserved), one latency draw per tile
+            if self._dedup:
+                dl = lines
+            else:
+                dl = list(dict.fromkeys(lines))
+            ref = self.line_ref
+            dram = self.dram
+            free = dram.free_at
+            nch = dram.channels
+            svc = dram.service
+            lb = self._lb
+            t_fill = 0
+            nm = 0
+            for la in dl:
+                c = ref.get(la)
+                if c:
+                    ref[la] = c + 1
+                    continue
+                ref[la] = 1
+                nm += 1
+                ch = (la // lb) % nch
+                s = free[ch]
+                if s < cycle:
+                    s = cycle
+                e = s + svc
+                free[ch] = e
+                if e > t_fill:
+                    t_fill = e
+            self.misses += nm
+            self.hits += nd - nm
+            dram.bytes_served += nm * lb
+            dram.busy_cycles += nm * svc
+            p0, p1 = self._part_counts(dl)
+            ent = [dl, p0, p1, 0, 0]
+            self.tiles[key] = ent
+            self._evict(cycle)
+            far = p1 if part == 0 else p0
+            lam = (self._near * (nd - far) + self._far * far) // nd
+            if fl is not None:
+                lam += fl.l2_extra(far > 0)
+            if nm:
+                # outstanding fill lines across live windows = MSHR pressure
+                out = nm
+                fd = self.fill_done
+                for k in list(fd):
+                    w = fd[k]
+                    if w[0] <= cycle:
+                        del fd[k]
+                    else:
+                        out += w[1]
+                if out > self.mshr_peak:
+                    self.mshr_peak = out
+                dlat = self._dram_lat if fl is None else \
+                    self._dram_lat + fl.dram_extra()
+                t_fill += dlat + lam
+                fd[key] = (t_fill, nm)
+                # per-line slot time blends the missed fraction's DRAM trip
+                lam_w = lam + dlat * nm // nd
+                t = self._stream(base, nd, lam_w)
+                if t < t_fill:
+                    t = t_fill
+            else:
+                lam_w = lam
+                t = self._stream(base, nd, lam)
+        elif filling is not None:
+            # tile fill already in flight from another SM pair: every line
+            # merges into the outstanding MSHRs and lands with the fill
+            self.mshr_merges += nd
+            self.tiles.move_to_end(key)
+            lam = self._near if fl is None else self._near + fl.l2_extra(False)
+            lam_w = lam
+            t = self._stream(base, nd, lam)
+            if t < filling + lam:
+                t = filling + lam
+        else:
+            # resident tile: streamed L2 hits at blended near/far latency
+            self.hits += nd
+            self.tiles.move_to_end(key)
+            mirrored = ent[4] if part else ent[3]
+            far = 0 if mirrored else (ent[2] if part == 0 else ent[1])
+            lam = (self._near * (nd - far) + self._far * far) // nd
+            if fl is not None:
+                lam += fl.l2_extra(far > 0)
+            if (far and not write and self._rc
+                    and self.resident_lines < self.capacity * self._rc_thresh
+                    and self.rng.random() < self._rc_prob):
+                # RemoteCopy proxy at tile granularity: mirror the far half
+                # into the requester partition; helps *subsequent* accesses
+                # and competes for capacity like line-exact mirrors do
+                if part:
+                    ent[4] = 1
+                else:
+                    ent[3] = 1
+                self.rc_inserts += far
+                self.mirror_lines += far
+                self._evict(cycle)
+            lam_w = lam
+            t = self._stream(base, nd, lam)
+        if pkey is not None:
+            # completions span [first line's landing, stream end]
+            self.pending[pkey] = (base + lam_w, t)
+            if len(self.pending) > 4096:    # lazy sweep of expired windows
+                self.pending = {k: v for k, v in self.pending.items()
+                                if v[1] > cycle}
+        return t
+
+    def stats(self):
+        return {"hits": self.hits, "misses": self.misses,
+                "mshr_merges": self.mshr_merges,
+                "rc_inserts": self.rc_inserts, "mshr_peak": self.mshr_peak,
+                "requests": self.requests}
+
+
 def build_memory(cfg: GPUMachine, evq: EventQueue, scale: float = 1.0,
-                 seed: int = 0, direct: bool = False):
+                 seed: int = 0, direct: bool = False, tile: bool = False):
     dram = DRAM(cfg, evq, scale)
     if direct:
+        if tile:
+            raise ValueError("mem_fidelity='tile' models the sliced-L2 "
+                             "path; direct HBM has no per-line cache events "
+                             "to collapse")
         front = DirectHBM(cfg, dram, evq)
+        return front, front, dram
+    if tile:
+        if not cfg.lrc_enabled:
+            raise ValueError(
+                "mem_fidelity='tile' requires the L2 request coalescer "
+                "(lrc_enabled): the no-LRC ablation studies per-line "
+                "request flooding and slice contention, which only exist "
+                "at line-exact fidelity")
+        front = TileMemory(cfg, dram, evq, scale, seed)
         return front, front, dram
     l2 = L2Cache(cfg, dram, evq, scale, seed)
     lrc = LRC(cfg, l2)

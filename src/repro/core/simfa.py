@@ -10,12 +10,21 @@ Fidelity modes (§2.3: cycle simulation is prohibitively slow on large
 workloads, so a corrected analytical model substitutes — we make the
 substitution structured instead of ad hoc):
 
-  * ``full``          — every CTA on every SM.
+  * ``full``          — every CTA on every SM, line-exact memory.
+  * ``tile``          — every CTA on every SM, tile-granular memory
+    (``Engine(mem_fidelity="tile")``): traffic counters byte-identical to
+    ``full``, cycles within the docs/fidelity.md error bound, ~10x faster.
+    Requires the L2 request coalescer (``lrc_enabled`` machines).
   * ``hierarchical``  — simulate ``n_sub`` SMs (memory system scaled
     proportionally) for two waves; total latency composes the measured
     first-wave latency with the measured marginal (steady-state) wave cost
     times the remaining wave count. Traffic scales with the CTA ratio.
-  * ``auto``          — full when the launch is small, else hierarchical.
+  * ``auto``          — precedence ``full`` -> ``tile`` -> ``hierarchical``:
+    full when the launch fits ``FULL_CTA_LIMIT``, tile while it fits
+    ``TILE_CTA_LIMIT`` (the ~10x engine speedup buys that headroom at
+    bounded cycle error), hierarchical beyond that.  An *explicit*
+    fidelity is always respected — no silent re-selection on large
+    launches.
 """
 from __future__ import annotations
 
@@ -33,6 +42,12 @@ from repro.obs.counters import CounterSink
 from repro.obs.manifest import build_manifest
 
 FULL_CTA_LIMIT = 600
+# the tile engine is ~10x faster than line-exact on the same launch
+# (docs/fidelity.md), so auto keeps cycle simulation ~10x longer before
+# falling back to the hierarchical wave model
+TILE_CTA_LIMIT = 6000
+
+FIDELITIES = ("auto", "full", "tile", "hierarchical")
 
 
 @dataclass
@@ -66,6 +81,8 @@ class SimResult:
     abort_info: Optional[dict] = None  # faults.watchdog.salvage snapshot
     fault_stats: Optional[dict] = None  # faults.FaultSession.stats() when a
                                         # fault plan was attached
+    mem_fidelity: str = "line"  # engine memory model that produced the run
+                                # ("line" exact / "tile" bulk transactions)
 
 
 def _run(cfg, ctas, tmaps, n_sms, mem_scale, record_gantt=False,
@@ -107,6 +124,9 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     with ``aborted=True`` and the salvaged partial state in
     ``abort_info`` instead of hanging."""
     spec = kernel_registry.get(kernel)
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, "
+                         f"got {fidelity!r}")
     if faults is not None or watchdog is not None:
         engine_opts = dict(engine_opts or {})
         if faults is not None:
@@ -118,22 +138,39 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
     # materialized (hierarchical mode simulates the first two waves only)
     total = spec.total_ctas(w, tiling)
     if fidelity == "auto":
-        fidelity = "full" if total <= FULL_CTA_LIMIT else "hierarchical"
-    need = total if fidelity == "full" else 2 * n_sub * cfg.occupancy_limit
+        # documented precedence: full -> tile -> hierarchical.  An explicit
+        # fidelity never reaches this branch (no silent re-selection).
+        # Machines without the L2 request coalescer never auto-select tile
+        # (the tile front end refuses lrc_enabled=False — per-line request
+        # flooding only exists at line-exact fidelity).
+        if total <= FULL_CTA_LIMIT:
+            fidelity = "full"
+        elif total <= TILE_CTA_LIMIT and cfg.lrc_enabled:
+            fidelity = "tile"
+        else:
+            fidelity = "hierarchical"
+    if fidelity == "tile":
+        # the tile tier is the full-launch engine with the tile-granular
+        # memory model; an explicit engine_opts mem_fidelity wins
+        engine_opts = dict(engine_opts or {})
+        engine_opts.setdefault("mem_fidelity", "tile")
+    cycle_exact = fidelity in ("full", "tile")
+    need = total if cycle_exact else 2 * n_sub * cfg.occupancy_limit
     ctas, tmaps = spec.build(cfg, w, tiling=tiling,
                              max_ctas=min(total, need))
     record = record_gantt or record_events
     snk = CounterSink(window=counter_window) if record_counters else None
     t_wall = time.perf_counter()
 
-    if fidelity == "full":
+    if cycle_exact:
         eng, st = _run(cfg, ctas, tmaps, cfg.num_sms, 1.0, record,
                        engine_opts, counters=snk)
-        manifest = _manifest(cfg, w, spec, tiling, eng, "full", snk,
+        manifest = _manifest(cfg, w, spec, tiling, eng, fidelity, snk,
                              time.perf_counter() - t_wall, st["cycles"])
         return SimResult(
-            latency_us=st["time_us"], cycles=st["cycles"], fidelity="full",
+            latency_us=st["time_us"], cycles=st["cycles"], fidelity=fidelity,
             n_ctas_total=total, n_ctas_simulated=total,
+            mem_fidelity=eng.mem_fidelity,
             tc_util=st["tc_util"],
             l2_bytes=st["tma_lines"] * cfg.line_bytes,
             l2_delivered_bytes=st["l2_req_bytes"],
@@ -175,6 +212,7 @@ def simulate_fa3(w: AttnWorkload, cfg: GPUMachine,
         latency_us=cycles / (cfg.freq_ghz * 1e3), cycles=cycles,
         fidelity="hierarchical", n_ctas_total=total,
         n_ctas_simulated=len(two),
+        mem_fidelity=eng1.mem_fidelity,
         tc_util=st2["tc_util"],
         l2_bytes=st2["tma_lines"] * cfg.line_bytes * traf_scale,
         l2_delivered_bytes=st2["l2_req_bytes"] * traf_scale,
@@ -197,6 +235,7 @@ def _manifest(cfg, w, spec, tiling, eng, fidelity, snk, wall_s, cycles):
     return build_manifest(
         machine=cfg, workload=w, kernel=spec.name, tiling=tiling,
         scheduler=eng.scheduler, fidelity=fidelity,
+        mem_fidelity=eng.mem_fidelity,
         counter_window=snk.window if snk is not None else None,
         wall_s=wall_s, sim_cycles=int(cycles),
         events_popped=eng.evq.popped,

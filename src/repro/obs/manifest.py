@@ -97,6 +97,7 @@ def build_manifest(*,
                    tiling: Any = None,
                    scheduler: Optional[str] = None,
                    fidelity: Optional[str] = None,
+                   mem_fidelity: Optional[str] = None,
                    counter_window: Optional[int] = None,
                    wall_s: Optional[float] = None,
                    sim_cycles: Optional[int] = None,
@@ -130,6 +131,10 @@ def build_manifest(*,
         m["scheduler"] = scheduler
     if fidelity is not None:
         m["fidelity"] = fidelity
+    if mem_fidelity is not None:
+        # tile-mode rows time differently from line-exact rows: the smoke
+        # gate must never compare cycles/s across memory fidelities
+        m["mem_fidelity"] = mem_fidelity
     if counter_window is not None:
         m["counter_window"] = counter_window
     if wall_s is not None:

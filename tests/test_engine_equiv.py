@@ -266,6 +266,93 @@ def test_deadlock_after_progress():
     assert results["event"][0] is True
 
 
+# ---------------------------------------------------------------------------
+# tile-granular memory fidelity (Engine(mem_fidelity="tile"))
+# ---------------------------------------------------------------------------
+
+# the reference full-fidelity launch under mem_fidelity="tile": pinned.
+# dram_bytes / tma_lines are byte-identical to FULL_ANCHOR by construction
+# (refcounted per-line residency); cycles and l2_req_bytes are approximated
+# within the docs/fidelity.md bounds (-1.12% / -1.69% vs line-exact).
+TILE_ANCHOR = {"cycles": 72792, "dram_bytes": 4194304,
+               "l2_req_bytes": 31170560, "tma_lines": 565248}
+
+TILE_CYCLE_ERR_MAX = 0.05
+
+
+def _run_kernel_mem(name, mem_fidelity):
+    """KERNEL_CONFIGS launch at full machine scale (tile mode's contract:
+    simfa only selects it for full-machine launches)."""
+    cfg, _, w, tiling = KERNEL_CONFIGS[name]
+    ctas, tmaps = registry.get(name).build(cfg, w, tiling=tiling)
+    eng = Engine(cfg, mem_fidelity=mem_fidelity)
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    return eng, eng.run()
+
+
+@pytest.mark.parametrize("name", sorted(KERNEL_CONFIGS))
+def test_tile_fidelity_traffic_identical_cycles_bounded(name):
+    """Every registered kernel: tile mode must reproduce dram_bytes,
+    tma_lines and L2 misses byte-identically and keep cycle error within
+    the documented bound."""
+    _, line = _run_kernel_mem(name, "line")
+    _, tile = _run_kernel_mem(name, "tile")
+    for key in ("dram_bytes", "tma_lines"):
+        assert line[key] == tile[key], f"{name}: {key} drifted"
+    assert line["l2"]["misses"] == tile["l2"]["misses"], name
+    err = abs(tile["cycles"] / line["cycles"] - 1.0)
+    assert err <= TILE_CYCLE_ERR_MAX, (
+        f"{name}: tile cycle error {err:.2%} "
+        f"({tile['cycles']} vs {line['cycles']})")
+
+
+def test_tile_fidelity_reference_anchor_72792():
+    """The reference FA3 launch in tile mode: pinned forever, traffic
+    byte-identical to the line-exact FULL_ANCHOR where exactness holds."""
+    w = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **w)
+    eng = Engine(H800, mem_fidelity="tile")
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    got = {k: st[k] for k in TILE_ANCHOR}
+    assert got == TILE_ANCHOR
+    assert st["dram_bytes"] == FULL_ANCHOR["dram_bytes"]
+    assert st["tma_lines"] == FULL_ANCHOR["tma_lines"]
+    assert abs(st["cycles"] / FULL_ANCHOR["cycles"] - 1.0) \
+        <= TILE_CYCLE_ERR_MAX
+
+
+def test_tile_fidelity_identity_fault_plan_bit_exact():
+    """Within tile mode, attaching the identity FaultPlan must not move
+    the pinned tile anchor by a single cycle or byte (the fault hooks on
+    the bulk-transaction path are read-only when off)."""
+    from repro.faults import FaultPlan
+    w = dict(B=1, L=1024, S=2048, H_kv=2, G=2, D=128)
+    ctas, tmaps = fa3_kernel_ctas(H800, tiling=FA3Tiling(), **w)
+    eng = Engine(H800, mem_fidelity="tile", faults=FaultPlan.identity())
+    for tm in tmaps.values():
+        eng.define_tmap(tm)
+    eng.launch(ctas)
+    st = eng.run()
+    assert {k: st[k] for k in TILE_ANCHOR} == TILE_ANCHOR
+
+
+def test_tile_fidelity_rejects_unsupported_configs():
+    """tile + no-LRC machines is an explicit error (the no-LRC ablation is
+    per-line request flooding by definition), as is tile + direct HBM; an
+    unknown mem_fidelity never constructs an engine."""
+    with pytest.raises(ValueError):
+        Engine(h800_variant(lrc_enabled=False), mem_fidelity="tile")
+    with pytest.raises(ValueError):
+        Engine(H800, direct_hbm=True, mem_fidelity="tile")
+    with pytest.raises(ValueError):
+        Engine(H800, mem_fidelity="page")
+
+
 def test_group_wait_counters_track_dict_bookkeeping():
     """The O(1) outstanding-group sets must reproduce the old full-dict scan,
     including the ``g <= gid`` filter: a committed group with a *higher* id

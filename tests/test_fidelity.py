@@ -1,0 +1,102 @@
+"""simfa fidelity-tier selection and mem_fidelity propagation.
+
+Covers the auto precedence ``full -> tile -> hierarchical`` (with the
+no-LRC guard that skips the tile tier), explicit-fidelity override
+semantics, the tile tier's traffic-parity contract against full, and the
+``mem_fidelity`` provenance stamp on SimResult + manifest.  The per-cell
+cycle/traffic error budget lives in tests/test_engine_equiv.py and
+benchmarks/bench_fidelity.py; this file is about *selection*.
+"""
+import pytest
+
+from repro.configs.llama3 import AttnWorkload
+from repro.core.engine import Engine
+from repro.core.machine import H800, h800_variant
+from repro.core.simfa import (FULL_CTA_LIMIT, TILE_CTA_LIMIT, simulate_fa3)
+
+# launches sized to land in each auto tier (CTA totals include the
+# ping-pong pair factor; S kept small so the tile-tier cycle sim stays
+# cheap in tier-1)
+SMALL_W = AttnWorkload(name="s", B=1, L=256, S=512, H_kv=1, G=2, D=128)
+MID_W = AttnWorkload(name="m", B=1, L=20480, S=128, H_kv=2, G=2, D=128)
+LARGE_W = AttnWorkload(name="l", B=8, L=4096, S=256, H_kv=8, G=4, D=128)
+
+
+def test_auto_precedence_small_selects_full():
+    r = simulate_fa3(SMALL_W, H800)
+    assert r.fidelity == "full"
+    assert r.mem_fidelity == "line"
+    assert r.n_ctas_total <= FULL_CTA_LIMIT
+    assert r.manifest["mem_fidelity"] == "line"
+
+
+def test_auto_precedence_mid_selects_tile():
+    r = simulate_fa3(MID_W, H800)
+    assert r.fidelity == "tile"
+    assert r.mem_fidelity == "tile"
+    assert FULL_CTA_LIMIT < r.n_ctas_total <= TILE_CTA_LIMIT
+    # tile is a cycle-exact tier: every CTA simulated, no extrapolation
+    assert r.n_ctas_simulated == r.n_ctas_total
+    assert r.manifest["mem_fidelity"] == "tile"
+
+
+def test_auto_precedence_large_selects_hierarchical():
+    r = simulate_fa3(LARGE_W, H800)
+    assert r.fidelity == "hierarchical"
+    assert r.mem_fidelity == "line"
+    assert r.n_ctas_total > TILE_CTA_LIMIT
+    assert r.n_ctas_simulated < r.n_ctas_total
+
+
+def test_auto_skips_tile_on_no_lrc_machines():
+    """The tile front end refuses lrc_enabled=False (the no-LRC ablation is
+    per-line request flooding by definition), so auto must route mid-size
+    launches on such machines straight to hierarchical."""
+    r = simulate_fa3(MID_W, h800_variant(lrc_enabled=False))
+    assert r.fidelity == "hierarchical"
+    assert r.mem_fidelity == "line"
+
+
+def test_explicit_fidelity_is_respected():
+    # explicit tile on a launch auto would run full
+    r = simulate_fa3(SMALL_W, H800, fidelity="tile")
+    assert r.fidelity == "tile"
+    assert r.mem_fidelity == "tile"
+    # explicit hierarchical on the same tiny launch
+    r2 = simulate_fa3(SMALL_W, H800, fidelity="hierarchical")
+    assert r2.fidelity == "hierarchical"
+    assert r2.mem_fidelity == "line"
+
+
+def test_explicit_engine_opts_mem_fidelity_wins():
+    """fidelity="full" with an explicit engine_opts mem_fidelity runs the
+    full tier on the tile memory model (the setdefault never overrides)."""
+    r = simulate_fa3(SMALL_W, H800, fidelity="full",
+                     engine_opts={"mem_fidelity": "tile"})
+    assert r.fidelity == "full"
+    assert r.mem_fidelity == "tile"
+    assert r.manifest["mem_fidelity"] == "tile"
+
+
+def test_unknown_fidelity_raises():
+    with pytest.raises(ValueError, match="fidelity"):
+        simulate_fa3(SMALL_W, H800, fidelity="approximate")
+
+
+def test_explicit_tile_on_no_lrc_machine_raises():
+    with pytest.raises(ValueError, match="lrc_enabled"):
+        simulate_fa3(SMALL_W, h800_variant(lrc_enabled=False),
+                     fidelity="tile")
+    with pytest.raises(ValueError, match="lrc_enabled"):
+        Engine(h800_variant(lrc_enabled=False), mem_fidelity="tile")
+
+
+def test_tile_tier_traffic_parity_with_full():
+    """On the same launch, the tile tier reports byte-identical DRAM/L2
+    demand traffic to full (the refcounted residency contract)."""
+    full = simulate_fa3(SMALL_W, H800, fidelity="full")
+    tile = simulate_fa3(SMALL_W, H800, fidelity="tile")
+    assert tile.dram_bytes == full.dram_bytes
+    assert tile.l2_bytes == full.l2_bytes
+    assert tile.l2_stats["misses"] == full.l2_stats["misses"]
+    assert abs(tile.cycles / full.cycles - 1.0) <= 0.05
